@@ -1,0 +1,37 @@
+//! Architecture report — renders the structural content of the paper's
+//! Fig. 2 (3D partitioning) and Fig. 3 (neural cluster) from the live
+//! [`ArchConfig`], plus the Fig. 5 floorplans.
+
+use j3dai::config::ArchConfig;
+use j3dai::power::area;
+use j3dai::report;
+
+fn main() {
+    let c = ArchConfig::j3dai();
+    println!("== J3DAI architecture (Fig. 2 / Fig. 3) ==\n");
+    println!("┌─ top die ──────────── 40nm ─┐  {}x{} RGB pixels, 1 um pitch", j3dai::sensor::SENSOR_W, j3dai::sensor::SENSOR_H);
+    println!("│   pixel matrix (12 Mpix)    │");
+    println!("├─ Cu-Cu hybrid bonding ──────┤");
+    println!("│ middle die ────────── 28nm  │  analog readout 6 mm², ISP,");
+    println!("│   RISC-V host ({} KB I / {} KB D), L2 {} MB", c.host_imem_bytes / 1024, c.host_dmem_bytes / 1024, c.l2_middle_bytes / (1024 * 1024));
+    println!("├─ {} HD-TSV ({} data, 1 um dia, 2 um pitch) ─┤", c.tsv_total, c.tsv_data);
+    println!("│ bottom die ────────── 28nm  │  DNN accelerator + L2 {} MB", c.l2_bottom_bytes / (1024 * 1024));
+    println!("└─────────────────────────────┘\n");
+
+    println!("DNN system @{:.0} MHz, {:.2} V:", c.freq_mhz, c.voltage);
+    println!("  {} neural clusters x {} NCBs x {} PEs = {} MAC/cycle ({:.1} GOPS peak)",
+        c.clusters, c.ncbs_per_cluster, c.pes_per_ncb, c.macs_per_cycle(), c.peak_gops());
+    println!("  NCB SRAM: {} KB x {} banks (flattened, fully generic)", c.ncb_sram_bytes / 1024, c.ncb_sram_banks);
+    println!("  local SRAM total: {} KB; L2 total: {} MB in {} blocks", c.local_sram_bytes() / 1024, c.l2_bytes() / (1024 * 1024), c.l2_blocks);
+    println!("  DMPA: {} bits/cycle ({} B/cycle); DMA bus: {} bits", c.dmpa_bits, c.dmpa_bits / 8, c.dma_bus_bits);
+    println!("  1 MB via DMPA: {} cycles | via DMA: {} cycles\n", c.dmpa_cycles(1_000_000), c.dma_cycles(1_000_000));
+
+    println!("neural cluster (Fig. 3):");
+    println!("  [controller+imem] -> broadcast -> {} x NCB", c.ncbs_per_cluster);
+    println!("  [AGU] multidim addresses   [AIU] hw loops drive routing");
+    println!("  [DMPA] -> CCONNECT columns -> NCB banks | [cluster router + multicast reg]\n");
+
+    print!("{}", report::render_floorplan(&area::middle_die(&c)));
+    print!("{}", report::render_floorplan(&area::bottom_die(&c)));
+    println!("\narch_report OK");
+}

@@ -1,0 +1,49 @@
+//! Classification pipeline — the paper's §IV-B1 scenario: MobileNetV1/V2
+//! feature extraction on the sensor, at both operating points (30 FPS
+//! surveillance, 200 FPS high-speed). Runs the reduced-scale artifact
+//! through PJRT for functional results and the full-scale 256x192 graphs
+//! through the cycle simulator for the paper's PPA numbers.
+
+use j3dai::config::ArchConfig;
+use j3dai::coordinator::{Coordinator, CoordinatorConfig};
+use j3dai::models;
+use j3dai::power::EnergyModel;
+use j3dai::{runtime, sim};
+
+fn main() -> j3dai::Result<()> {
+    let cfg = ArchConfig::j3dai();
+    let em = EnergyModel::fdsoi28();
+
+    println!("== classification pipeline (MobileNetV1 / V2) ==\n");
+
+    // 1. full-scale PPA from the cycle simulator (Table I's rows)
+    for (g, name) in [(models::paper_mbv1(), "MobileNetV1@256x192"), (models::paper_mbv2(), "MobileNetV2@256x192")] {
+        let r = sim::simulate(&g, &cfg)?;
+        println!("{name}:");
+        println!("  {:.0} MMACs, {} cycles -> {:.2} ms @200 MHz, MAC eff {:.1}%", r.total_macs as f64 / 1e6, r.cycles, r.latency_ms, r.mac_efficiency * 100.0);
+        for fps in [30.0, 200.0] {
+            match r.power_mw(&em, fps) {
+                Some(p) => println!("  @{fps:>3.0} FPS: {:.1} mW, {:.2} TOPs/W", p, r.tops_per_watt(&em, fps).unwrap()),
+                None => println!("  @{fps:>3.0} FPS: not sustainable (latency {:.2} ms)", r.latency_ms),
+            }
+        }
+    }
+
+    // 2. functional inference on live synthetic frames through PJRT
+    println!("\nfunctional run (reduced-scale artifacts, PJRT):");
+    let coord = Coordinator::new(
+        &runtime::default_artifact_dir(),
+        CoordinatorConfig { target_fps: 200.0, frames: 10, arch: cfg },
+    )?;
+    for model in ["mbv1_w25_48x64", "mbv2_w25_48x64"] {
+        let stats = coord.run_model(model)?;
+        println!(
+            "  {model}: {} frames, mean {:.1} ms service, classes {:?}",
+            stats.frames,
+            stats.mean_service_us / 1e3,
+            &stats.records.iter().map(|r| r.top_class).collect::<Vec<_>>()[..5.min(stats.records.len())]
+        );
+    }
+    println!("\nclassify_pipeline OK");
+    Ok(())
+}

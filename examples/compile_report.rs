@@ -1,0 +1,56 @@
+//! Compile report — walks the Aidge-analog export (paper Fig. 4) for each
+//! Table I workload and prints the solver's decisions: memory placement,
+//! per-layer tiling, PE utilization, transfer engine, program footprint.
+
+use j3dai::compiler;
+use j3dai::config::ArchConfig;
+use j3dai::models;
+
+fn main() -> j3dai::Result<()> {
+    let cfg = ArchConfig::j3dai();
+    for g in [models::paper_mbv1(), models::paper_mbv2(), models::paper_seg()] {
+        let c = compiler::compile(&g, &cfg)?;
+        println!("== {} ==", c.model);
+        println!(
+            "  layers {} | MMACs {:.0} | params {:.2} MB | peak act {:.2} MB | L2 {} MB",
+            g.layers.len(),
+            g.total_macs() as f64 / 1e6,
+            c.param_bytes as f64 / 1e6,
+            c.peak_activation_bytes as f64 / 1e6,
+            cfg.l2_bytes() / (1024 * 1024)
+        );
+        println!(
+            "  programs: {} bytes over {} clusters ({} instrs)",
+            c.program_bytes(),
+            c.cluster_programs.len(),
+            c.cluster_programs.iter().map(|p| p.instrs.len()).sum::<usize>()
+        );
+        let avg_util = c.layer_maps.iter().map(|m| m.pe_utilization).sum::<f64>() / c.layer_maps.len() as f64;
+        println!("  mean in-tile PE utilization: {:.1}%", avg_util * 100.0);
+        println!("  worst 5 layers by utilization:");
+        let mut by_util = c.layer_maps.clone();
+        by_util.sort_by(|a, b| a.pe_utilization.partial_cmp(&b.pe_utilization).unwrap());
+        for m in by_util.iter().take(5) {
+            println!(
+                "    {:<30} gemm {:>7}x{:<5}x{:<5} tile {:>3}x{:<4}x{:<3} util {:>5.1}% {}",
+                m.name,
+                m.m,
+                m.k,
+                m.n,
+                m.bm,
+                m.bk,
+                m.bn,
+                m.pe_utilization * 100.0,
+                if m.use_dmpa { "DMPA" } else { "DMA" }
+            );
+        }
+        // the first cluster program's head, as the paper's Fig. 4 "assembly"
+        println!("  cluster 0 program head:");
+        for line in c.cluster_programs[0].listing().lines().take(8) {
+            println!("    {line}");
+        }
+        println!();
+    }
+    println!("compile_report OK");
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Functional-interpreter perf probe (used by the §Perf iteration log in
+//! EXPERIMENTS.md): wallclock of the Rust PE-model forward per artifact.
+
+use std::time::Instant;
+
+fn main() {
+    for name in ["tinycnn_24x32", "mbv1_w25_48x64", "mbv2_w25_48x64", "fpnseg_w25_48x64"] {
+        let g = j3dai::models::artifact_graph(name).unwrap();
+        let x = j3dai::sim::functional::synthetic_input(name, g.input);
+        // warmup
+        let _ = j3dai::sim::functional::run_final(&g, &x);
+        let t = Instant::now();
+        let iters = 5;
+        for _ in 0..iters {
+            let _ = j3dai::sim::functional::run_final(&g, &x);
+        }
+        println!("{name}: {:.2} ms/run", t.elapsed().as_secs_f64() * 1e3 / iters as f64);
+    }
+}

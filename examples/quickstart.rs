@@ -1,0 +1,42 @@
+//! Quickstart — the end-to-end driver: synthetic sensor frames stream
+//! through the coordinator, each inference executes the AOT JAX artifact
+//! through PJRT (functional result) while the cycle simulator accounts the
+//! accelerator's latency/energy, exactly as `j3dai serve` does.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use j3dai::config::ArchConfig;
+use j3dai::coordinator::{Coordinator, CoordinatorConfig};
+use j3dai::runtime;
+
+fn main() -> j3dai::Result<()> {
+    let dir = runtime::default_artifact_dir();
+    println!("== J3DAI quickstart ==");
+    println!("artifacts: {}", dir.display());
+
+    let coord = Coordinator::new(
+        &dir,
+        CoordinatorConfig { target_fps: 60.0, frames: 30, arch: ArchConfig::j3dai() },
+    )?;
+    println!("loaded models: {:?}", coord.model_names());
+
+    let stats = coord.run_model("tinycnn_24x32")?;
+    println!(
+        "\n{}: {} frames, achieved {:.1} FPS (target 60)",
+        stats.model, stats.frames, stats.achieved_fps
+    );
+    println!(
+        "PJRT service time: mean {:.0} us, p99 {:.0} us",
+        stats.mean_service_us, stats.p99_service_us
+    );
+    println!(
+        "modeled accelerator: {:.3} ms/inference, {:.1} mW at 60 FPS",
+        stats.modeled_latency_ms, stats.modeled_power_mw_at_fps
+    );
+    let classes: Vec<usize> = stats.records.iter().map(|r| r.top_class).collect();
+    println!("per-frame classes: {classes:?}");
+    println!("\nquickstart OK");
+    Ok(())
+}

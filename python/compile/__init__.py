@@ -1,0 +1,11 @@
+"""J3DAI build-time compile package: L1 Pallas kernels, L2 JAX models, AOT.
+
+Python runs ONCE (`make artifacts`) and never on the request path; the Rust
+binary is self-contained after artifacts are built.
+"""
+
+import jax
+
+# The requant contract multiplies int32 accumulators by int32 multipliers in
+# int64 — enable x64 before any kernel module is imported.
+jax.config.update("jax_enable_x64", True)

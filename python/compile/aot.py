@@ -1,0 +1,100 @@
+"""AOT export: lower every registry model to HLO text for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction
+ids; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs, under artifacts/:
+  <model>.hlo.txt          lowered forward graph (uint8 in, uint8 out tuple)
+  <model>.input.bin        deterministic synthetic input frame (weights.py)
+  <model>.golden.bin       jax-evaluated golden output bytes
+  manifest.txt             one line per model:
+      name=<n> hlo=<f> input=HxWxC output=<d0xd1[xd2]> golden=<f> inbin=<f>
+
+The Rust integration tests load the manifest, execute the HLO via PJRT on
+the .input.bin frame and (a) compare against .golden.bin, (b) compare the
+Rust functional simulator's output against the same bytes — closing the
+three-layer equivalence loop.
+"""
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model as M  # noqa: E402
+from . import weights  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default ELIDES big
+    # weight literals as `constant({...})`, which xla_extension 0.5.1's
+    # text parser silently turns into garbage values.
+    return comp.as_hlo_text(True)
+
+
+def export_model(name: str, outdir: str) -> str:
+    fwd, shape = M.MODELS[name]
+    spec = jax.ShapeDtypeStruct(shape, np.uint8)
+    print(f"[aot] lowering {name} input={shape} ...", flush=True)
+    lowered = jax.jit(fwd).lower(spec)
+    hlo = to_hlo_text(lowered)
+    hlo_path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    x = weights.gen_input_u8(name, shape)
+    in_path = os.path.join(outdir, f"{name}.input.bin")
+    x.tofile(in_path)
+
+    print(f"[aot] evaluating golden output for {name} ...", flush=True)
+    y = np.asarray(jax.jit(fwd)(x)[0])
+    golden_path = os.path.join(outdir, f"{name}.golden.bin")
+    y.tofile(golden_path)
+
+    dims = "x".join(str(d) for d in y.shape)
+    ishape = "x".join(str(d) for d in shape)
+    return (
+        f"name={name} hlo={os.path.basename(hlo_path)} input={ishape} "
+        f"output={dims} golden={os.path.basename(golden_path)} "
+        f"inbin={os.path.basename(in_path)}"
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--models", default="", help="comma list; default = all")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    names = [n for n in args.models.split(",") if n] or list(M.MODELS)
+    # merge with any existing manifest so partial re-exports don't drop models
+    manifest_path = os.path.join(args.out, "manifest.txt")
+    entries: dict[str, str] = {}
+    if os.path.exists(manifest_path):
+        for line in open(manifest_path):
+            if line.strip():
+                key = dict(p.split("=", 1) for p in line.split())["name"]
+                entries[key] = line.strip()
+    for n in names:
+        entries[n] = export_model(n, args.out)
+    with open(manifest_path, "w") as f:
+        f.write("\n".join(entries[k] for k in M.MODELS if k in entries) + "\n")
+    print(f"[aot] wrote {len(names)} artifacts to {args.out} ({len(entries)} in manifest)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,12 @@
+"""J3DAI L1 Pallas kernels (interpret=True) and their pure oracles."""
+
+from . import kcfg  # noqa: F401
+from .dwconv_int8 import dwconv3x3_int8  # noqa: F401
+from .elemwise import (  # noqa: F401
+    global_avgpool,
+    nlu_sigmoid,
+    qadd,
+    qadd_params,
+    upsample2x_nearest,
+)
+from .matmul_int8 import matmul_int8, rq_record  # noqa: F401

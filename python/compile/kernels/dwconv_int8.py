@@ -1,0 +1,90 @@
+"""Pallas INT8 depthwise 3x3 convolution with fused requantization.
+
+MobileNet's depthwise stage does not reduce across channels, so it cannot
+use the GEMM MAC array efficiently; on J3DAI it maps to the NCBs' SIMD
+lanes with the *local router* providing neighbor access for the 3x3 halo
+and the AGU walking the spatial loop. Here each grid step owns a channel
+tile (DW_BC = 8 channels = one NCB PE row) and the whole (padded) spatial
+slab sits in VMEM — the analog of one NCB SRAM working set.
+
+Stride 1 only; stride-2 layers compute the stride-1 map and the wrapper
+subsamples (the hardware AGU does the same walk with a stride register —
+cycle cost is modeled in the Rust simulator, not here).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import kcfg
+
+
+def _dw_kernel(x_ref, w_ref, bias_ref, rq_ref, y_ref, *, h: int, wd: int):
+    """x_ref: (h+2, wd+2, bc) uint8 padded slab; w_ref: (3, 3, bc) int8.
+
+    bias_ref: (1, 1, bc) int32; rq_ref: (1, 1, 8) int32; y_ref: (h, wd, bc) u8.
+    """
+    zp_in = rq_ref[0, 0, 0]
+    bc = y_ref.shape[-1]
+    acc = jnp.broadcast_to(bias_ref[...].astype(jnp.int32), (h, wd, bc))
+    x = x_ref[...].astype(jnp.int32) - zp_in
+    # 9 shifted MACs — the local router's neighbor-access pattern.
+    for dy in range(3):
+        for dx in range(3):
+            tap = jax.lax.dynamic_slice(x, (dy, dx, 0), (h, wd, bc))
+            acc = acc + tap * w_ref[dy, dx, :].astype(jnp.int32)
+    mult = rq_ref[0, 0, 1].astype(jnp.int64)
+    shift = rq_ref[0, 0, 2].astype(jnp.int64)
+    zp_out = rq_ref[0, 0, 3]
+    act_min = rq_ref[0, 0, 4]
+    act_max = rq_ref[0, 0, 5]
+    rnd = jnp.int64(1) << (shift - 1)
+    y = jax.lax.shift_right_arithmetic(acc.astype(jnp.int64) * mult + rnd, shift)
+    y = y.astype(jnp.int32) + zp_out
+    y_ref[...] = jnp.clip(y, act_min, act_max).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "bc"))
+def dwconv3x3_int8(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    bias: jax.Array,
+    rq: jax.Array,
+    stride: int = 1,
+    bc: int = kcfg.DW_BC,
+) -> jax.Array:
+    """Quantized depthwise conv: x_q (H, W, C) u8, w_q (3, 3, C) i8, SAME pad.
+
+    bias (C,) i32; rq (8,) i32 record; returns (ceil(H/s), ceil(W/s), C) u8.
+    """
+    h, wd, c = x_q.shape
+    assert w_q.shape == (3, 3, c), w_q.shape
+    cp = kcfg.pad_to(c, bc)
+    zp = rq[0].astype(jnp.uint8)
+    # SAME padding with the zero-point so padded taps contribute 0.
+    x_p = jnp.full((h + 2, wd + 2, cp), zp, jnp.uint8)
+    x_p = x_p.at[1 : h + 1, 1 : wd + 1, :c].set(x_q)
+    w_p = jnp.zeros((3, 3, cp), jnp.int8).at[..., :c].set(w_q)
+    b_p = jnp.zeros((1, 1, cp), jnp.int32).at[0, 0, :c].set(bias)
+    rq3 = rq.reshape(1, 1, 8)
+
+    grid = (cp // bc,)
+    y = pl.pallas_call(
+        functools.partial(_dw_kernel, h=h, wd=wd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((h + 2, wd + 2, bc), lambda j: (0, 0, j)),
+            pl.BlockSpec((3, 3, bc), lambda j: (0, 0, j)),
+            pl.BlockSpec((1, 1, bc), lambda j: (0, 0, j)),
+            pl.BlockSpec((1, 1, 8), lambda j: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((h, wd, bc), lambda j: (0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((h, wd, cp), jnp.uint8),
+        interpret=True,
+    )(x_p, w_p, b_p, rq3)
+    y = y[:, :, :c]
+    if stride == 2:
+        y = y[::2, ::2, :]
+    return y

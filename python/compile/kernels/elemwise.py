@@ -1,0 +1,155 @@
+"""Pallas elementwise kernels: quantized residual add, pooling, and the NLU.
+
+These map to the J3DAI PE's ALU (add/compare paths) and the non-linear
+operation unit (NLU), which evaluates activations through a piecewise-linear
+approximation — here a 16-segment PWL sigmoid on the 9-bit centered domain,
+matching rust/src/sim/pe.rs::nlu_sigmoid exactly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import kcfg
+
+# ---------------------------------------------------------------------------
+# Quantized residual add (MobileNetV2 / FPN lateral adds)
+# ---------------------------------------------------------------------------
+
+
+def _qadd_kernel(a_ref, b_ref, p_ref, y_ref):
+    """y = clamp((((a-zpa)*Ma + (b-zpb)*Mb + rnd) >> sh) + zpo, lo, hi).
+
+    p_ref: (1, 8) i32 [zpa, zpb, Ma, Mb, shift, zpo, lo, hi]
+    """
+    zpa = p_ref[0, 0]
+    zpb = p_ref[0, 1]
+    ma = p_ref[0, 2].astype(jnp.int64)
+    mb = p_ref[0, 3].astype(jnp.int64)
+    sh = p_ref[0, 4].astype(jnp.int64)
+    zpo = p_ref[0, 5]
+    lo = p_ref[0, 6]
+    hi = p_ref[0, 7]
+    a = (a_ref[...].astype(jnp.int32) - zpa).astype(jnp.int64)
+    b = (b_ref[...].astype(jnp.int32) - zpb).astype(jnp.int64)
+    rnd = jnp.int64(1) << (sh - 1)
+    y = jax.lax.shift_right_arithmetic(a * ma + b * mb + rnd, sh)
+    y = y.astype(jnp.int32) + zpo
+    y_ref[...] = jnp.clip(y, lo, hi).astype(jnp.uint8)
+
+
+@jax.jit
+def qadd(a: jax.Array, b: jax.Array, params: jax.Array) -> jax.Array:
+    """Quantized elementwise add of two uint8 tensors of identical shape."""
+    assert a.shape == b.shape, (a.shape, b.shape)
+    n = a.size
+    blk = kcfg.EW_BLOCK
+    np_ = kcfg.pad_to(n, blk)
+    zpa = params[0].astype(jnp.uint8)
+    zpb = params[1].astype(jnp.uint8)
+    a_p = jnp.full((np_,), zpa, jnp.uint8).at[:n].set(a.reshape(-1))
+    b_p = jnp.full((np_,), zpb, jnp.uint8).at[:n].set(b.reshape(-1))
+    y = pl.pallas_call(
+        _qadd_kernel,
+        grid=(np_ // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.uint8),
+        interpret=True,
+    )(a_p, b_p, params.reshape(1, 8))
+    return y[:n].reshape(a.shape)
+
+
+def qadd_params(zpa=128, zpb=128, ma=None, mb=None, shift=24, zpo=128, lo=0, hi=255):
+    if ma is None:
+        ma = 1 << (shift - 1)
+    if mb is None:
+        mb = 1 << (shift - 1)
+    return jnp.array([zpa, zpb, ma, mb, shift, zpo, lo, hi], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Non-Linear operation Unit: 16-segment PWL sigmoid over the centered domain
+# ---------------------------------------------------------------------------
+
+# Breakpoints every 32 codes over [-256, 255] (9-bit domain); slopes/offsets
+# are Q8 fixed point: y = (slope * (x - x0) >> 8) + base, y in [0, 255].
+# Table = round(sigmoid(x0 / 48.0) * 255) at the breakpoints; constants are
+# frozen here AND in rust/src/sim/pe.rs (parity-tested).
+NLU_X0 = [-256 + 32 * i for i in range(16)]
+NLU_BASE = [1, 2, 5, 9, 17, 30, 53, 86, 128, 168, 202, 225, 238, 246, 250, 253]
+NLU_NEXT = NLU_BASE[1:] + [254]
+NLU_SLOPE = [((NLU_NEXT[i] - NLU_BASE[i]) * 256) // 32 for i in range(16)]
+
+
+def _nlu_kernel(x_ref, p_ref, lut_ref, y_ref):
+    """PWL sigmoid: x u8 -> center by zp -> 16-segment interp -> u8.
+
+    lut_ref: (3, 16) i32 rows = [x0, base, slope] — the NLU's segment table,
+    loaded like any other operand (the hardware NLU holds it in a small ROM).
+    """
+    zp = p_ref[0, 0]
+    x = x_ref[...].astype(jnp.int32) - zp  # [-255, 255]
+    seg = jnp.clip((x + 256) >> 5, 0, 15)
+    x0 = lut_ref[0, :][seg]
+    base = lut_ref[1, :][seg]
+    slope = lut_ref[2, :][seg]
+    y = base + ((slope * (x - x0)) >> 8)
+    y_ref[...] = jnp.clip(y, 0, 255).astype(jnp.uint8)
+
+
+@jax.jit
+def nlu_sigmoid(x: jax.Array, zp: jax.Array) -> jax.Array:
+    """Quantized sigmoid through the NLU PWL table. x: any-shape uint8."""
+    n = x.size
+    blk = kcfg.EW_BLOCK
+    np_ = kcfg.pad_to(n, blk)
+    x_p = jnp.zeros((np_,), jnp.uint8).at[:n].set(x.reshape(-1))
+    p = jnp.array([[zp, 0, 0, 0, 0, 0, 0, 0]], jnp.int32)
+    lut = jnp.array([NLU_X0, NLU_BASE, NLU_SLOPE], jnp.int32)
+    y = pl.pallas_call(
+        _nlu_kernel,
+        grid=(np_ // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            pl.BlockSpec((3, 16), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.uint8),
+        interpret=True,
+    )(x_p, p, lut)
+    return y[:n].reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Global average pooling (classifier head) — ALU accumulate + requant
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=())
+def global_avgpool(x: jax.Array, zp_in: jax.Array) -> jax.Array:
+    """(H, W, C) u8 -> (1, C) u8 mean, computed in i32 like the PE ALU.
+
+    Small reduction; runs as plain XLA ops on the host-visible path (the
+    paper schedules pooling on the PE ALU — cycle cost modeled in Rust).
+    Rounding matches rust sim: (sum + n/2) / n in integer arithmetic over
+    the *uint8 codes* (zero-point cancels in the mean).
+    """
+    h, w, c = x.shape
+    n = h * w
+    s = jnp.sum(x.astype(jnp.int32), axis=(0, 1))
+    y = (s + n // 2) // n
+    del zp_in
+    return jnp.clip(y, 0, 255).astype(jnp.uint8).reshape(1, c)
+
+
+def upsample2x_nearest(x: jax.Array) -> jax.Array:
+    """(H, W, C) -> (2H, 2W, C) nearest — pure data movement (DMPA copies)."""
+    return jnp.repeat(jnp.repeat(x, 2, axis=0), 2, axis=1)

@@ -1,0 +1,35 @@
+"""Kernel tiling configuration — the L1 analog of the J3DAI NCB memory budget.
+
+The paper's Neural Computing Block is a multi-banked SRAM feeding 8 SIMD PEs;
+a cluster has 16 NCBs and the DMPA moves 1024 bits/cycle between the global
+L2 memory and the NCB columns.  On the Pallas side we mirror that hierarchy:
+
+  HBM  <->  VMEM           ==   L2 (5 MB)  <->  NCB SRAM banks
+  MXU tile                 ==   cluster's 16x8 = 128-PE MAC array
+  BlockSpec grid schedule  ==   DMPA column-transfer schedule
+
+Block sizes are chosen so one (x, w, acc) working set fits the per-cluster
+SRAM analog (16 NCBs x 16 KB = 256 KB), exactly the constraint the paper's
+mapping solver enforces, and so the M/N tile is a multiple of the 128-lane
+MAC array.
+"""
+
+# GEMM tile (im2col convolution): bm x bk activations, bk x bn weights,
+# bm x bn int32 accumulators.
+# Working set = 64*64 (u8) + 64*64 (i8) + 64*64*4 (i32) = 24 KB << 256 KB;
+# the slack is the double-buffering headroom the scheduler exploits.
+BM = 64
+BN = 64
+BK = 64
+
+# Depthwise tile: one spatial slab x a channel tile. 8 channels = one NCB's
+# PE row; the local router's neighbor access provides the halo.
+DW_BC = 8
+
+# Elementwise tile (quantized add / activations / NLU).
+EW_BLOCK = 1024
+
+
+def pad_to(x: int, m: int) -> int:
+    """Round x up to a multiple of m."""
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,125 @@
+"""Pallas INT8 GEMM with fused requantization — the J3DAI MAC-array kernel.
+
+This kernel is the L1 expression of the paper's compute hot spot: every
+convolution (after im2col), pointwise convolution and dense layer in the
+MobileNet / FPN models lowers to this tile loop.
+
+Hardware adaptation (paper -> Pallas/TPU model, see DESIGN.md):
+  - the 6x16x8 = 768-PE MAC array        -> one (BM, BN) MXU-style tile
+  - NCB multi-bank SRAM                  -> VMEM blocks (BlockSpec)
+  - DMPA column transfer schedule        -> the (m, n, k) grid index maps
+  - weight multicast via local routers   -> the shared W block per n-tile
+  - 9-bit multiplier / 32-bit accumulate -> (u8 - zp) * i8 in int32 acc
+  - fused requant on the store path      -> epilogue at the last k step
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import kcfg
+
+
+def _gemm_kernel(x_ref, w_ref, bias_ref, rq_ref, acc_ref, y_ref, *, n_k: int):
+    """One (m, n, k) grid step: acc += (x - zp) @ w, requant at k == n_k-1.
+
+    x_ref:    (BM, BK) uint8 activation tile
+    w_ref:    (BK, BN) int8 weight tile (multicast operand)
+    bias_ref: (1, BN) int32
+    rq_ref:   (1, 8) int32 [zp_in, mult, shift, zp_out, act_min, act_max, 0, 0]
+    acc_ref:  (BM, BN) int32 accumulator output (aliased across k steps)
+    y_ref:    (BM, BN) uint8 requantized output
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.broadcast_to(
+            bias_ref[...].astype(jnp.int32), acc_ref.shape
+        )
+
+    zp_in = rq_ref[0, 0]
+    x = x_ref[...].astype(jnp.int32) - zp_in  # 9-bit signed PE operand
+    w = w_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _requant():
+        mult = rq_ref[0, 1].astype(jnp.int64)
+        shift = rq_ref[0, 2]
+        zp_out = rq_ref[0, 3]
+        act_min = rq_ref[0, 4]
+        act_max = rq_ref[0, 5]
+        acc = acc_ref[...].astype(jnp.int64)
+        rnd = jnp.int64(1) << (shift.astype(jnp.int64) - 1)
+        y = jax.lax.shift_right_arithmetic(acc * mult + rnd, shift.astype(jnp.int64))
+        y = y.astype(jnp.int32) + zp_out
+        y = jnp.clip(y, act_min, act_max)
+        y_ref[...] = y.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_int8(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    bias: jax.Array,
+    rq: jax.Array,
+    bm: int = kcfg.BM,
+    bn: int = kcfg.BN,
+    bk: int = kcfg.BK,
+) -> jax.Array:
+    """Quantized GEMM: y = requant((x - zp_in) @ w + bias).
+
+    x_q:  (M, K) uint8;  w_q: (K, N) int8;  bias: (N,) int32
+    rq:   (8,) int32 requant record (see _gemm_kernel)
+    returns (M, N) uint8.
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (k, k2)
+    mp, np_, kp = kcfg.pad_to(m, bm), kcfg.pad_to(n, bn), kcfg.pad_to(k, bk)
+    # Pad K with zp so (x - zp) contributes exactly zero to the accumulator.
+    zp = rq[0].astype(jnp.uint8)
+    x_p = jnp.full((mp, kp), zp, jnp.uint8).at[:m, :k].set(x_q)
+    w_p = jnp.zeros((kp, np_), jnp.int8).at[:k, :n].set(w_q)
+    b_p = jnp.zeros((1, np_), jnp.int32).at[0, :n].set(bias)
+    rq2 = rq.reshape(1, 8)
+    n_k = kp // bk
+
+    grid = (mp // bm, np_ // bn, n_k)
+    acc, y = pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, 8), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.uint8),
+        ],
+        interpret=True,
+    )(x_p, w_p, b_p, rq2)
+    del acc  # 32-bit accumulator state; only the requantized tile leaves the PE
+    return y[:m, :n]
+
+
+def rq_record(zp_in: int, mult: int, shift: int, zp_out: int, act_min: int, act_max: int):
+    """Pack requant parameters into the (8,) int32 record the kernels take."""
+    return jnp.array([zp_in, mult, shift, zp_out, act_min, act_max, 0, 0], jnp.int32)

@@ -1,0 +1,98 @@
+"""Pure-jnp/numpy oracle for every L1 kernel — the correctness contract.
+
+Each function here is the straight-line mathematical definition of the
+quantized op, with no tiling, padding tricks, or Pallas. The pytest suite
+asserts the Pallas kernels match these bit-for-bit; the Rust functional
+simulator matches the same contract (checked end-to-end through the PJRT
+artifacts).
+"""
+
+import numpy as np
+
+
+def requant_ref(acc: np.ndarray, mult: int, shift: int, zp_out: int, lo: int, hi: int):
+    acc = acc.astype(np.int64)
+    y = (acc * np.int64(mult) + (np.int64(1) << (shift - 1))) >> shift
+    y = y + zp_out
+    return np.clip(y, lo, hi).astype(np.uint8)
+
+
+def matmul_int8_ref(x_q, w_q, bias, rq):
+    """x_q (M,K) u8, w_q (K,N) i8, bias (N,) i32, rq (8,) i32 record."""
+    zp_in, mult, shift, zp_out, lo, hi = (int(v) for v in np.asarray(rq)[:6])
+    x = x_q.astype(np.int64) - zp_in
+    w = w_q.astype(np.int64)
+    acc = x @ w + bias.astype(np.int64)[None, :]
+    # The PE accumulator is 32-bit: assert the synthetic scales keep us in it.
+    assert np.all(np.abs(acc) < 2**31), "int32 accumulator overflow in oracle"
+    return requant_ref(acc, mult, shift, zp_out, lo, hi)
+
+
+def dwconv3x3_int8_ref(x_q, w_q, bias, rq, stride=1):
+    """x_q (H,W,C) u8, w_q (3,3,C) i8, bias (C,) i32, SAME padding."""
+    zp_in, mult, shift, zp_out, lo, hi = (int(v) for v in np.asarray(rq)[:6])
+    h, wd, c = x_q.shape
+    x = np.full((h + 2, wd + 2, c), zp_in, np.int64)
+    x[1 : h + 1, 1 : wd + 1, :] = x_q.astype(np.int64)
+    x = x - zp_in
+    acc = np.zeros((h, wd, c), np.int64) + bias.astype(np.int64)[None, None, :]
+    for dy in range(3):
+        for dx in range(3):
+            acc += x[dy : dy + h, dx : dx + wd, :] * w_q[dy, dx, :].astype(np.int64)
+    assert np.all(np.abs(acc) < 2**31), "int32 accumulator overflow in oracle"
+    y = requant_ref(acc, mult, shift, zp_out, lo, hi)
+    if stride == 2:
+        y = y[::2, ::2, :]
+    return y
+
+
+def qadd_ref(a, b, params):
+    zpa, zpb, ma, mb, sh, zpo, lo, hi = (int(v) for v in np.asarray(params)[:8])
+    av = a.astype(np.int64) - zpa
+    bv = b.astype(np.int64) - zpb
+    y = (av * ma + bv * mb + (np.int64(1) << (sh - 1))) >> sh
+    y = y + zpo
+    return np.clip(y, lo, hi).astype(np.uint8)
+
+
+def nlu_sigmoid_ref(x, zp):
+    from . import elemwise as ew
+
+    xv = x.astype(np.int64) - int(zp)
+    seg = np.clip((xv + 256) >> 5, 0, 15).astype(np.int64)
+    x0 = np.asarray(ew.NLU_X0, np.int64)[seg]
+    base = np.asarray(ew.NLU_BASE, np.int64)[seg]
+    slope = np.asarray(ew.NLU_SLOPE, np.int64)[seg]
+    y = base + ((slope * (xv - x0)) >> 8)
+    return np.clip(y, 0, 255).astype(np.uint8)
+
+
+def global_avgpool_ref(x, zp_in=0):
+    h, w, c = x.shape
+    n = h * w
+    s = x.astype(np.int64).sum(axis=(0, 1))
+    return np.clip((s + n // 2) // n, 0, 255).astype(np.uint8).reshape(1, c)
+
+
+def conv2d_int8_ref(x_q, w_q, bias, rq, stride=1):
+    """Full conv oracle via explicit im2col: x (H,W,Cin) u8, w (kh,kw,Cin,Cout) i8.
+
+    SAME padding (pad = (k-1)//2), stride s. Matches model.py's conv path.
+    """
+    zp_in = int(np.asarray(rq)[0])
+    kh, kw, cin, cout = w_q.shape
+    h, wd, _ = x_q.shape
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    xp = np.full((h + 2 * ph, wd + 2 * pw, cin), zp_in, np.uint8)
+    xp[ph : ph + h, pw : pw + wd, :] = x_q
+    oh = (h + 2 * ph - kh) // stride + 1
+    ow = (wd + 2 * pw - kw) // stride + 1
+    cols = np.zeros((oh * ow, kh * kw * cin), np.uint8)
+    idx = 0
+    for oy in range(oh):
+        for ox in range(ow):
+            patch = xp[oy * stride : oy * stride + kh, ox * stride : ox * stride + kw, :]
+            cols[idx] = patch.reshape(-1)
+            idx += 1
+    y = matmul_int8_ref(cols, w_q.reshape(kh * kw * cin, cout), bias, rq)
+    return y.reshape(oh, ow, cout)

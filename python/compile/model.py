@@ -1,0 +1,262 @@
+"""L2 — quantized JAX forward graphs built on the L1 Pallas kernels.
+
+These are the *golden functional models*: MobileNetV1(alpha), MobileNetV2
+and the FPN segmentation network of the paper, in uint8 inference form,
+with synthetic deterministic weights (see weights.py). The Rust side
+(rust/src/models/ + rust/src/sim/) rebuilds the identical topology with the
+identical weight streams and must reproduce these outputs bit-exactly
+through the PJRT artifacts.
+
+Topology / naming contract (mirrored in rust/src/models/mod.rs):
+  mbv1:   conv0, dw1..dw13, pw1..pw13, avgpool, fc
+  mbv2:   conv0, b{i}/exp, b{i}/dw, b{i}/proj (+ residual add), convlast, fc
+  fpnseg: backbone mbv1(alpha) conv0..pw13, fpn/lat3..lat5, top-down adds,
+          fpn/head, fpn/cls
+  channel rounding: ch(c) = max(8, ((c*num//den) + 4)//8*8), alpha = num/den
+  conv weight tensor name = "<layer>/w", layout (kh, kw, cin, cout);
+  bias stream name = "<layer>" (weights.gen_bias_i32 appends "/bias");
+  requant = quantize.requant_for_reduction(K), K = kh*kw*cin.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize, weights
+from .kernels import (
+    dwconv3x3_int8,
+    global_avgpool,
+    matmul_int8,
+    qadd,
+    qadd_params,
+    rq_record,
+    upsample2x_nearest,
+)
+
+ZP = 128  # global synthetic activation zero point
+
+
+def ch(c: int, num: int, den: int) -> int:
+    """Width-multiplier channel rounding (integer-exact, mirrored in Rust)."""
+    return max(8, ((c * num // den) + 4) // 8 * 8)
+
+
+@dataclass
+class Net:
+    """Accumulates layers while building; records the layer list for tests."""
+
+    name: str
+    layers: list = field(default_factory=list)
+
+    def _rq(self, k: int, relu: bool = True, relu6: bool = False):
+        r = quantize.requant_for_reduction(k, relu=relu, relu6=relu6)
+        return rq_record(ZP, r.mult, r.shift, r.zp_out, r.act_min, r.act_max)
+
+    # -- ops -----------------------------------------------------------------
+
+    def conv(self, x, lname: str, kh: int, kw: int, cout: int, stride: int = 1,
+             relu: bool = True):
+        """SAME conv via im2col + the Pallas GEMM kernel."""
+        h, w, cin = x.shape
+        full = f"{self.name}/{lname}"
+        wq = jnp.asarray(weights.gen_weights_i8(full + "/w", (kh, kw, cin, cout)))
+        bias = jnp.asarray(weights.gen_bias_i32(full, cout))
+        rq = self._rq(kh * kw * cin, relu=relu)
+        ph, pw_ = (kh - 1) // 2, (kw - 1) // 2
+        oh = (h + 2 * ph - kh) // stride + 1
+        ow = (w + 2 * pw_ - kw) // stride + 1
+        xp = jnp.full((h + 2 * ph, w + 2 * pw_, cin), np.uint8(ZP), jnp.uint8)
+        xp = xp.at[ph : ph + h, pw_ : pw_ + w, :].set(x)
+        # im2col in (dy, dx, cin) order — matches w.reshape(kh*kw*cin, cout).
+        cols = jnp.concatenate(
+            [
+                xp[dy : dy + (oh - 1) * stride + 1 : stride,
+                   dx : dx + (ow - 1) * stride + 1 : stride, :]
+                for dy in range(kh)
+                for dx in range(kw)
+            ],
+            axis=-1,
+        ).reshape(oh * ow, kh * kw * cin)
+        y = matmul_int8(cols, wq.reshape(kh * kw * cin, cout), bias, rq)
+        self.layers.append((lname, "conv", (kh, kw, cin, cout, stride), (oh, ow, cout)))
+        return y.reshape(oh, ow, cout)
+
+    def dwconv(self, x, lname: str, stride: int = 1):
+        h, w, c = x.shape
+        full = f"{self.name}/{lname}"
+        wq = jnp.asarray(weights.gen_weights_i8(full + "/w", (3, 3, c)))
+        bias = jnp.asarray(weights.gen_bias_i32(full, c))
+        rq = self._rq(9)
+        y = dwconv3x3_int8(x, wq, bias, rq, stride=stride)
+        self.layers.append((lname, "dwconv", (3, 3, c, c, stride), tuple(y.shape)))
+        return y
+
+    def add(self, a, b, lname: str):
+        y = qadd(a, b, qadd_params())
+        self.layers.append((lname, "add", (), tuple(y.shape)))
+        return y
+
+    def avgpool(self, x, lname: str = "avgpool"):
+        y = global_avgpool(x, jnp.int32(ZP))
+        self.layers.append((lname, "avgpool", (), tuple(y.shape)))
+        return y
+
+    def dense(self, x, lname: str, n_out: int):
+        m, k = x.shape
+        full = f"{self.name}/{lname}"
+        wq = jnp.asarray(weights.gen_weights_i8(full + "/w", (k, n_out)))
+        bias = jnp.asarray(weights.gen_bias_i32(full, n_out))
+        rq = self._rq(k, relu=False)
+        y = matmul_int8(x, wq, bias, rq)
+        self.layers.append((lname, "dense", (1, 1, k, n_out, 1), (m, n_out)))
+        return y
+
+    def upsample(self, x, lname: str):
+        y = upsample2x_nearest(x)
+        self.layers.append((lname, "upsample", (), tuple(y.shape)))
+        return y
+
+
+# -----------------------------------------------------------------------------
+# MobileNetV1
+# -----------------------------------------------------------------------------
+
+MBV1_CH = [64, 128, 128, 256, 256, 512, 512, 512, 512, 512, 512, 1024, 1024]
+MBV1_STRIDE = [1, 2, 1, 2, 1, 2, 1, 1, 1, 1, 1, 2, 1]
+
+
+def mobilenet_v1(alpha_num: int, alpha_den: int, classes: int = 100,
+                 taps: tuple[int, ...] = ()) -> Callable:
+    """Quantized MobileNetV1 forward. `taps` = 1-based block indices whose
+    pw output is also returned (for the FPN backbone)."""
+
+    def fwd(x):
+        net = Net(f"mbv1_{alpha_num}_{alpha_den}")
+        x = net.conv(x, "conv0", 3, 3, ch(32, alpha_num, alpha_den), stride=2)
+        tapped = []
+        for i, (c, s) in enumerate(zip(MBV1_CH, MBV1_STRIDE), start=1):
+            x = net.dwconv(x, f"dw{i}", stride=s)
+            x = net.conv(x, f"pw{i}", 1, 1, ch(c, alpha_num, alpha_den))
+            if i in taps:
+                tapped.append(x)
+        if taps:
+            return tuple(tapped)
+        x = net.avgpool(x)
+        x = net.dense(x, "fc", classes)
+        return (x,)
+
+    return fwd
+
+
+# -----------------------------------------------------------------------------
+# MobileNetV2
+# -----------------------------------------------------------------------------
+
+# (expansion t, channels c, repeats n, first stride s)
+MBV2_CFG = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def mobilenet_v2(alpha_num: int, alpha_den: int, classes: int = 100) -> Callable:
+    def fwd(x):
+        net = Net(f"mbv2_{alpha_num}_{alpha_den}")
+        x = net.conv(x, "conv0", 3, 3, ch(32, alpha_num, alpha_den), stride=2)
+        bi = 0
+        for t, c, n, s in MBV2_CFG:
+            cout = ch(c, alpha_num, alpha_den)
+            for r in range(n):
+                bi += 1
+                stride = s if r == 0 else 1
+                cin = x.shape[-1]
+                inp = x
+                if t != 1:
+                    x = net.conv(x, f"b{bi}/exp", 1, 1, cin * t)
+                x = net.dwconv(x, f"b{bi}/dw", stride=stride)
+                # linear bottleneck: projection has no ReLU
+                x = net.conv(x, f"b{bi}/proj", 1, 1, cout, relu=False)
+                if stride == 1 and cin == cout:
+                    x = net.add(inp, x, f"b{bi}/add")
+        x = net.conv(x, "convlast", 1, 1, ch(1280, alpha_num, alpha_den))
+        x = net.avgpool(x)
+        x = net.dense(x, "fc", classes)
+        return (x,)
+
+    return fwd
+
+
+# -----------------------------------------------------------------------------
+# FPN segmentation (MobileNetV1 backbone, paper: alpha = 0.5, 512x384 input)
+# -----------------------------------------------------------------------------
+
+FPN_CH = 128  # pyramid width; 128 @ alpha=0.5 lands on the paper's 877 MMACs
+
+
+def fpn_seg(alpha_num: int, alpha_den: int, classes: int = 19) -> Callable:
+    """FPN head over MobileNetV1 taps C3 (pw5, stride 8), C4 (pw11, stride 16),
+    C5 (pw13, stride 32). Output logits at stride 8."""
+
+    def fwd(x):
+        c3, c4, c5 = mobilenet_v1(alpha_num, alpha_den, taps=(5, 11, 13))(x)
+        net = Net(f"fpnseg_{alpha_num}_{alpha_den}")
+        pc = ch(FPN_CH, alpha_num, alpha_den)
+        l5 = net.conv(c5, "fpn/lat5", 1, 1, pc)
+        l4 = net.conv(c4, "fpn/lat4", 1, 1, pc)
+        l3 = net.conv(c3, "fpn/lat3", 1, 1, pc)
+        def up_to(p, lat, lname):
+            """2x nearest upsample cropped to the lateral's spatial dims
+            (inputs not divisible by 32 give odd pyramid levels)."""
+            u = net.upsample(p, lname)
+            return u[: lat.shape[0], : lat.shape[1], :]
+
+        p5 = l5
+        p4 = net.add(l4, up_to(p5, l4, "fpn/up5"), "fpn/add4")
+        p3 = net.add(l3, up_to(p4, l3, "fpn/up4"), "fpn/add3")
+        h = net.conv(p3, "fpn/head", 3, 3, pc)
+        h = net.conv(h, "fpn/head2", 3, 3, pc)
+        y = net.conv(h, "fpn/cls", 1, 1, classes, relu=False)
+        return (y,)
+
+    return fwd
+
+
+# -----------------------------------------------------------------------------
+# Tiny CNN — the quickstart / smoke-test model
+# -----------------------------------------------------------------------------
+
+
+def tinycnn(classes: int = 10) -> Callable:
+    def fwd(x):
+        net = Net("tinycnn")
+        x = net.conv(x, "conv0", 3, 3, 8, stride=2)
+        x = net.dwconv(x, "dw1")
+        x = net.conv(x, "pw1", 1, 1, 16)
+        x = net.avgpool(x)
+        x = net.dense(x, "fc", classes)
+        return (x,)
+
+    return fwd
+
+
+# -----------------------------------------------------------------------------
+# Registry used by aot.py and the tests. Input shapes are (H, W, C) uint8.
+# Reduced-scale variants: full 256x192 interpret-mode tracing is minutes;
+# the Rust cycle simulator handles full-size Table I workloads (DESIGN.md).
+# -----------------------------------------------------------------------------
+
+MODELS: dict[str, tuple[Callable, tuple[int, int, int]]] = {
+    "tinycnn_24x32": (tinycnn(), (24, 32, 3)),
+    "mbv1_w25_48x64": (mobilenet_v1(1, 4), (48, 64, 3)),
+    "mbv2_w25_48x64": (mobilenet_v2(1, 4), (48, 64, 3)),
+    "fpnseg_w25_48x64": (fpn_seg(1, 4), (48, 64, 3)),
+}

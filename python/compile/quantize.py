@@ -1,0 +1,84 @@
+"""Post-training-quantization arithmetic contract.
+
+This module defines the *integer semantics* shared bit-exactly between:
+  - the Pallas kernels (L1) and the pure-jnp oracle (kernels/ref.py),
+  - the Rust functional PE model (rust/src/sim/pe.rs),
+  - the Rust quantizer (rust/src/quant/).
+
+Scheme (mirrors the paper's Aidge post-training quantization to uint8):
+  - activations: uint8, per-tensor affine (zero_point in [0,255]).
+    After zero-point subtraction the operand is a 9-bit signed value —
+    exactly the width of the J3DAI PE multiplier.
+  - weights: int8, per-tensor symmetric (zero_point = 0).
+  - accumulate: int32 (the PE's 32-bit accumulator), bias folded in int32.
+  - requantize: fixed-point multiplier + right shift (gemmlowp style):
+        y = clamp( ((acc * M + (1 << (shift-1))) >> shift) + zp_out,
+                   act_min, act_max )
+    with the product taken in int64.  Rounding is "half away from zero
+    toward +inf" for the positive bias — the same formula on both sides,
+    so no ties-to-even mismatch can occur.
+  - ReLU  -> act_min = zp_out;  ReLU6 -> act_max = q(6.0).
+
+Scales never appear at inference time; they only determine (M, shift) at
+export. For the synthetic-weight golden models we derive (M, shift) from
+the reduction depth K so activations neither saturate nor collapse.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+SHIFT = 24  # fixed post-scaling shift used across the stack
+ACC_BITS = 32
+UINT8_MAX = 255
+
+
+@dataclass(frozen=True)
+class Requant:
+    """Requantization parameters for one layer output."""
+
+    mult: int  # int32 fixed-point multiplier
+    shift: int  # right shift
+    zp_out: int  # output zero point
+    act_min: int  # post-activation clamp low (uint8 domain)
+    act_max: int  # post-activation clamp high
+
+
+def requant_for_reduction(k: int, relu: bool = True, relu6: bool = False) -> Requant:
+    """Deterministic requant params for a synthetic layer of reduction depth k.
+
+    With int8 weights uniform in [-64, 63] (std ~37) and ReLU'd centered
+    activations (std ~30), the accumulator std is ~ sqrt(k)*30*37; scaling
+    by 1/(sqrt(k)*48) keeps the requantized output std at a healthy ~23-57
+    codes without saturating the uint8 range.  Must match
+    rust/src/quant/mod.rs::requant_for_reduction exactly (same f64 math).
+    """
+    k = max(int(k), 1)
+    scale = 1.0 / (np.sqrt(float(k)) * 48.0)
+    mult = max(1, int(round(scale * (1 << SHIFT))))
+    zp = 128
+    lo = zp if relu else 0
+    hi = 224 if relu6 else UINT8_MAX  # q(6.0) under the synthetic scale
+    return Requant(mult=mult, shift=SHIFT, zp_out=zp, act_min=lo, act_max=hi)
+
+
+def requant_apply_np(acc: np.ndarray, rq: Requant) -> np.ndarray:
+    """Reference numpy implementation of the requant contract."""
+    acc = acc.astype(np.int64)
+    y = (acc * np.int64(rq.mult) + (np.int64(1) << (rq.shift - 1))) >> rq.shift
+    y = y + rq.zp_out
+    return np.clip(y, rq.act_min, rq.act_max).astype(np.uint8)
+
+
+def add_requant_for(k_a: int = 1, k_b: int = 1) -> tuple[Requant, Requant, Requant]:
+    """Requant triples (Ma, Mb, out) for a quantized residual add.
+
+    out = clamp(((a - zp) * Ma + (b - zp) * Mb + rnd) >> shift) + zp.
+    Both inputs share the synthetic zp=128 domain, so Ma = Mb = 2^(shift-1)
+    gives the average of the two branches — stays in range, keeps signal.
+    """
+    half = 1 << (SHIFT - 1)
+    a = Requant(mult=half, shift=SHIFT, zp_out=128, act_min=0, act_max=255)
+    b = Requant(mult=half, shift=SHIFT, zp_out=128, act_min=0, act_max=255)
+    out = Requant(mult=0, shift=SHIFT, zp_out=128, act_min=0, act_max=255)
+    return a, b, out

@@ -1,0 +1,76 @@
+"""Deterministic synthetic weight generation, shared with the Rust side.
+
+We have no ImageNet/Cityscapes checkpoints in this environment (see
+DESIGN.md substitution table), so golden-model weights are generated from a
+named PRNG stream that the Rust functional simulator reproduces exactly:
+
+    seed    = fnv1a64(tensor_name)
+    z_i     = splitmix64(seed + (i+1) * GAMMA)   # i-th draw of the stream
+    int8  w = (z_i >> 40) % 128 - 64             # in [-64, 63]
+    int32 b = (z_i >> 32) % 2048 - 1024          # in [-1024, 1023]
+
+The i-th output of a sequential splitmix64 generator is a pure function of
+seed + (i+1)*GAMMA, so the stream vectorizes in numpy while the Rust side
+(rust/src/quant/weights.rs) iterates sequentially — identical bits.
+"""
+
+import numpy as np
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK = (1 << 64) - 1
+_GAMMA = 0x9E3779B97F4A7C15
+
+
+def fnv1a64(name: str) -> int:
+    h = _FNV_OFFSET
+    for byte in name.encode("utf-8"):
+        h ^= byte
+        h = (h * _FNV_PRIME) & _MASK
+    return h
+
+
+def _splitmix_stream(seed: int, n: int) -> np.ndarray:
+    """First n draws of a splitmix64 generator seeded with `seed`."""
+    with np.errstate(over="ignore"):
+        i = np.arange(1, n + 1, dtype=np.uint64)
+        z = np.uint64(seed & _MASK) + i * np.uint64(_GAMMA)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+class SplitMix64:
+    """Sequential splitmix64 — kept for parity tests against the stream."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + _GAMMA) & _MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+        return (z ^ (z >> 31)) & _MASK
+
+
+def gen_weights_i8(name: str, shape: tuple[int, ...]) -> np.ndarray:
+    """int8 weights in [-64, 63] from the named stream."""
+    n = int(np.prod(shape))
+    z = _splitmix_stream(fnv1a64(name), n)
+    vals = ((z >> np.uint64(40)) % np.uint64(128)).astype(np.int64) - 64
+    return vals.astype(np.int8).reshape(shape)
+
+
+def gen_bias_i32(name: str, n: int) -> np.ndarray:
+    """int32 biases in [-1024, 1023] from the named stream."""
+    z = _splitmix_stream(fnv1a64(name + "/bias"), n)
+    vals = ((z >> np.uint64(32)) % np.uint64(2048)).astype(np.int64) - 1024
+    return vals.astype(np.int32)
+
+
+def gen_input_u8(name: str, shape: tuple[int, ...]) -> np.ndarray:
+    """uint8 synthetic input frame from the named stream."""
+    n = int(np.prod(shape))
+    z = _splitmix_stream(fnv1a64(name + "/input"), n)
+    return (z >> np.uint64(56)).astype(np.uint8).reshape(shape)

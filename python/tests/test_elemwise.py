@@ -1,0 +1,92 @@
+"""Elementwise kernels (qadd, NLU, pooling, upsample) vs oracle."""
+
+import numpy as np
+import pytest
+
+import compile  # noqa: F401
+from compile import weights
+from compile.kernels import (
+    global_avgpool,
+    nlu_sigmoid,
+    qadd,
+    qadd_params,
+    upsample2x_nearest,
+)
+from compile.kernels import ref
+from compile.kernels.elemwise import NLU_BASE, NLU_SLOPE, NLU_X0
+
+
+@pytest.mark.parametrize("shape", [(7, 9, 5), (1,), (1024,), (1025,), (6, 8, 19)])
+def test_qadd_matches_oracle(shape):
+    a = weights.gen_input_u8(f"qa/{shape}", shape)
+    b = weights.gen_input_u8(f"qb/{shape}", shape)
+    p = qadd_params()
+    y = np.asarray(qadd(a, b, p))
+    np.testing.assert_array_equal(y, ref.qadd_ref(a, b, np.asarray(p)))
+
+
+def test_qadd_identity_zero_point():
+    """zp + zp -> zp: the quantized add of two zero tensors is zero."""
+    a = np.full((33,), 128, np.uint8)
+    y = np.asarray(qadd(a, a, qadd_params()))
+    np.testing.assert_array_equal(y, a)
+
+
+def test_qadd_is_commutative():
+    a = weights.gen_input_u8("qc/a", (100,))
+    b = weights.gen_input_u8("qc/b", (100,))
+    p = qadd_params()
+    np.testing.assert_array_equal(np.asarray(qadd(a, b, p)), np.asarray(qadd(b, a, p)))
+
+
+def test_nlu_matches_oracle_all_codes():
+    """Exhaustive over the whole uint8 domain."""
+    x = np.arange(256, dtype=np.uint8)
+    y = np.asarray(nlu_sigmoid(x, 128))
+    np.testing.assert_array_equal(y, ref.nlu_sigmoid_ref(x, 128))
+
+
+def test_nlu_is_monotone():
+    x = np.arange(256, dtype=np.uint8)
+    y = np.asarray(nlu_sigmoid(x, 128)).astype(np.int32)
+    assert np.all(np.diff(y) >= 0)
+
+
+def test_nlu_table_shape():
+    assert len(NLU_X0) == len(NLU_BASE) == len(NLU_SLOPE) == 16
+    assert all(s >= 0 for s in NLU_SLOPE)
+
+
+@pytest.mark.parametrize("h,w,c", [(4, 4, 8), (7, 5, 3), (1, 1, 16), (6, 8, 64)])
+def test_avgpool_matches_oracle(h, w, c):
+    x = weights.gen_input_u8(f"ap/{h}x{w}x{c}", (h, w, c))
+    y = np.asarray(global_avgpool(x, np.int32(128)))
+    np.testing.assert_array_equal(y, ref.global_avgpool_ref(x))
+
+
+def test_avgpool_constant_input():
+    x = np.full((5, 5, 4), 77, np.uint8)
+    y = np.asarray(global_avgpool(x, np.int32(128)))
+    np.testing.assert_array_equal(y, np.full((1, 4), 77, np.uint8))
+
+
+def test_upsample2x_nearest():
+    x = weights.gen_input_u8("up", (3, 4, 2))
+    y = np.asarray(upsample2x_nearest(x))
+    assert y.shape == (6, 8, 2)
+    for i in range(6):
+        for j in range(8):
+            np.testing.assert_array_equal(y[i, j], x[i // 2, j // 2])
+
+
+def test_nlu_approximates_true_sigmoid():
+    """The NLU's 16-segment PWL table approximates sigmoid(x/48)*255 to
+    within a few codes over the full 9-bit domain — the 'approximation of
+    functions' quality claim of the PE's non-linear unit."""
+    x = np.arange(256, dtype=np.uint8)
+    y = np.asarray(nlu_sigmoid(x, 128)).astype(np.float64)
+    xv = x.astype(np.float64) - 128.0
+    true = 255.0 / (1.0 + np.exp(-xv / 48.0))
+    err = np.abs(y - true)
+    assert err.max() <= 8.0, f"max PWL error {err.max()} codes"
+    assert err.mean() <= 3.0, f"mean PWL error {err.mean()} codes"

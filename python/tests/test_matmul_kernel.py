@@ -1,0 +1,93 @@
+"""Pallas INT8 GEMM kernel vs the pure oracle — the core L1 signal."""
+
+import numpy as np
+import pytest
+
+import compile  # noqa: F401  (enables x64)
+from compile import quantize, weights
+from compile.kernels import matmul_int8, rq_record
+from compile.kernels import ref
+
+
+def _rq(k, relu=True, relu6=False):
+    r = quantize.requant_for_reduction(k, relu=relu, relu6=relu6)
+    return rq_record(128, r.mult, r.shift, r.zp_out, r.act_min, r.act_max)
+
+
+def _run(m, k, n, tag, relu=True, bm=64, bn=64, bk=64):
+    x = weights.gen_input_u8(f"mm/{tag}", (m, k))
+    w = weights.gen_weights_i8(f"mm/{tag}/w", (k, n))
+    b = weights.gen_bias_i32(f"mm/{tag}", n)
+    rq = _rq(k, relu=relu)
+    y = np.asarray(matmul_int8(x, w, b, rq, bm=bm, bn=bn, bk=bk))
+    yr = ref.matmul_int8_ref(x, w, b, np.asarray(rq))
+    np.testing.assert_array_equal(y, yr)
+    return y
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),          # degenerate
+        (64, 64, 64),       # exactly one tile
+        (65, 64, 64),       # one row of M spill
+        (64, 65, 64),       # K spill exercises zp-padding correctness
+        (64, 64, 65),       # N spill
+        (37, 50, 20),       # all-odd
+        (128, 256, 96),     # multi-tile all dims
+        (1, 2048, 10),      # dense-classifier shape (M=1)
+        (3072, 27, 8),      # conv0 im2col shape (K < BK)
+    ],
+)
+def test_matmul_matches_oracle(m, k, n):
+    _run(m, k, n, f"{m}x{k}x{n}")
+
+
+def test_matmul_no_relu_passes_negative_range():
+    """relu=False keeps act_min=0 so sub-zero-point codes survive."""
+    y = _run(48, 96, 32, "norelu", relu=False)
+    assert y.min() < 128, "expected codes below the zero point without ReLU"
+
+
+def test_matmul_relu_clamps_at_zero_point():
+    y = _run(48, 96, 32, "relu", relu=True)
+    assert y.min() >= 128
+
+
+def test_matmul_relu6_clamps_high():
+    x = weights.gen_input_u8("mm/r6", (32, 64))
+    w = weights.gen_weights_i8("mm/r6/w", (64, 16))
+    b = weights.gen_bias_i32("mm/r6", 16)
+    rq = _rq(64, relu6=True)
+    y = np.asarray(matmul_int8(x, w, b, rq))
+    assert y.max() <= 224  # q(6.0) under the synthetic scale
+    np.testing.assert_array_equal(y, ref.matmul_int8_ref(x, w, b, np.asarray(rq)))
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (16, 64, 128), (128, 16, 16)])
+def test_matmul_tile_shape_invariance(bm, bn, bk):
+    """Result must not depend on the BlockSpec tiling (pure schedule change)."""
+    _run(96, 160, 48, "tiles", bm=bm, bn=bn, bk=bk)
+
+
+def test_matmul_zero_point_padding_is_neutral():
+    """K padded with zp contributes exactly 0: compare padded vs unpadded K."""
+    x = weights.gen_input_u8("mm/pad", (64, 60))
+    w = weights.gen_weights_i8("mm/pad/w", (60, 32))
+    b = weights.gen_bias_i32("mm/pad", 32)
+    rq = _rq(60)
+    y1 = np.asarray(matmul_int8(x, w, b, rq))
+    # manually pad K to 64 with zp/zeros — must give identical output
+    xp = np.full((64, 64), 128, np.uint8)
+    xp[:, :60] = x
+    wp = np.zeros((64, 32), np.int8)
+    wp[:60, :] = w
+    y2 = np.asarray(matmul_int8(xp, wp, b, rq))
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_matmul_accumulator_is_32bit_safe():
+    """Worst-case |acc| for the largest model reduction stays within int32."""
+    k_max = 9 * 1024  # 3x3 conv at 1024 input channels
+    worst = k_max * 255 * 64 + 1024
+    assert worst < 2**31

@@ -1,0 +1,97 @@
+"""L2 model graphs: shapes, determinism, and conv-vs-oracle equivalence."""
+
+import numpy as np
+import pytest
+
+import compile  # noqa: F401
+from compile import model as M
+from compile import quantize, weights
+from compile.kernels import ref, rq_record
+
+
+def test_channel_rounding_contract():
+    # Mirrored in rust/src/graph — these exact values are load-bearing.
+    assert M.ch(32, 1, 1) == 32
+    assert M.ch(32, 1, 4) == 8
+    assert M.ch(64, 1, 4) == 16
+    assert M.ch(1024, 1, 4) == 256
+    assert M.ch(32, 1, 2) == 16
+    assert M.ch(512, 1, 2) == 256
+    assert M.ch(3, 1, 1) == 8  # floor at 8
+    assert M.ch(1280, 1, 4) == 320
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_model_output_shape_and_determinism(name):
+    fwd, shape = M.MODELS[name]
+    x = weights.gen_input_u8(name, shape)
+    y1 = np.asarray(fwd(x)[0])
+    y2 = np.asarray(fwd(x)[0])
+    np.testing.assert_array_equal(y1, y2)
+    assert y1.dtype == np.uint8
+
+
+def test_model_outputs_match_golden_artifacts():
+    """If `make artifacts` has run, the current code must still reproduce the
+    golden bytes (catches contract drift between aot time and test time)."""
+    import os
+
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(art, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built")
+    for line in open(manifest):
+        kv = dict(p.split("=", 1) for p in line.split())
+        fwd, shape = M.MODELS[kv["name"]]
+        x = np.fromfile(os.path.join(art, kv["inbin"]), np.uint8).reshape(shape)
+        y = np.asarray(fwd(x)[0])
+        golden = np.fromfile(os.path.join(art, kv["golden"]), np.uint8)
+        np.testing.assert_array_equal(y.reshape(-1), golden, err_msg=kv["name"])
+
+
+def test_conv_layer_matches_im2col_oracle():
+    """The Net.conv im2col path == the explicit-loop conv oracle."""
+    net = M.Net("mbv1_1_4")  # reuse a model stream name -> same weights
+    x = weights.gen_input_u8("convcheck", (10, 12, 5))
+    y = net.conv(x, "conv0", 3, 3, 8, stride=2)
+
+    full = "mbv1_1_4/conv0"
+    w = weights.gen_weights_i8(full + "/w", (3, 3, 5, 8))
+    b = weights.gen_bias_i32(full, 8)
+    r = quantize.requant_for_reduction(3 * 3 * 5)
+    rq = rq_record(128, r.mult, r.shift, r.zp_out, r.act_min, r.act_max)
+    yr = ref.conv2d_int8_ref(x, w, b, np.asarray(rq), stride=2)
+    np.testing.assert_array_equal(np.asarray(y), yr)
+
+
+def test_mbv1_layer_count():
+    fwd, shape = M.MODELS["mbv1_w25_48x64"]
+    net_layers = []
+    # rebuild with a tracing Net by running fwd and counting via layer log
+    import jax
+
+    x = weights.gen_input_u8("layercount", shape)
+    # count conv ops in the lowered HLO instead: 1 conv0 + 13 pw + 1 fc GEMMs
+    # and 13 dwconvs. We count layer records by rebuilding Net manually:
+    net = M.Net("probe")
+    y = net.conv(x, "c", 3, 3, 8, stride=2)
+    assert net.layers[0][1] == "conv"
+    # The MBV1 topology constant itself:
+    assert len(M.MBV1_CH) == 13 and len(M.MBV1_STRIDE) == 13
+    assert M.MBV1_STRIDE.count(2) == 4  # strides 4->32
+
+
+def test_mbv2_residual_condition():
+    """Residual adds appear exactly where stride==1 and cin==cout."""
+    # This encodes the paper's observation that branching structures add
+    # data movement: count of adds for the standard config.
+    n_adds = 0
+    cin = M.ch(32, 1, 4)
+    for t, c, n, s in M.MBV2_CFG:
+        cout = M.ch(c, 1, 4)
+        for r in range(n):
+            stride = s if r == 0 else 1
+            if stride == 1 and cin == cout:
+                n_adds += 1
+            cin = cout
+    assert n_adds == 11  # includes the t=1 first block (cin==cout==8 at a=1/4)

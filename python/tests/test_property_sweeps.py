@@ -1,0 +1,85 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/parameter space.
+
+These are the L1 property tests the brief calls for: arbitrary shapes,
+strides, zero points and requant parameters, always asserting bit-exact
+agreement with the pure oracle.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import compile  # noqa: F401
+from compile import weights
+from compile.kernels import dwconv3x3_int8, matmul_int8, nlu_sigmoid, qadd, rq_record
+from compile.kernels import ref
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**_SETTINGS)
+@given(
+    m=st.integers(1, 90),
+    k=st.integers(1, 140),
+    n=st.integers(1, 90),
+    zp=st.integers(0, 255),
+    mult=st.integers(1, 1 << 20),
+    shift=st.integers(8, 30),
+    zpo=st.integers(0, 255),
+    seed=st.integers(0, 10_000),
+)
+def test_matmul_property(m, k, n, zp, mult, shift, zpo, seed):
+    tag = f"prop/{seed}"
+    x = weights.gen_input_u8(tag, (m, k))
+    w = weights.gen_weights_i8(tag + "/w", (k, n))
+    b = weights.gen_bias_i32(tag, n)
+    rq = rq_record(zp, mult, shift, zpo, 0, 255)
+    y = np.asarray(matmul_int8(x, w, b, rq))
+    np.testing.assert_array_equal(y, ref.matmul_int8_ref(x, w, b, np.asarray(rq)))
+
+
+@settings(**_SETTINGS)
+@given(
+    h=st.integers(1, 20),
+    w=st.integers(1, 20),
+    c=st.integers(1, 40),
+    stride=st.sampled_from([1, 2]),
+    zp=st.integers(0, 255),
+    seed=st.integers(0, 10_000),
+)
+def test_dwconv_property(h, w, c, stride, zp, seed):
+    tag = f"dwprop/{seed}"
+    x = weights.gen_input_u8(tag, (h, w, c))
+    wq = weights.gen_weights_i8(tag + "/w", (3, 3, c))
+    b = weights.gen_bias_i32(tag, c)
+    rq = rq_record(zp, 116509, 24, 128, 0, 255)
+    y = np.asarray(dwconv3x3_int8(x, wq, b, rq, stride=stride))
+    yr = ref.dwconv3x3_int8_ref(x, wq, b, np.asarray(rq), stride=stride)
+    np.testing.assert_array_equal(y, yr)
+
+
+@settings(**_SETTINGS)
+@given(
+    n=st.integers(1, 5000),
+    zpa=st.integers(0, 255),
+    zpb=st.integers(0, 255),
+    ma=st.integers(0, 1 << 24),
+    mb=st.integers(0, 1 << 24),
+    sh=st.integers(8, 30),
+    seed=st.integers(0, 10_000),
+)
+def test_qadd_property(n, zpa, zpb, ma, mb, sh, seed):
+    import jax.numpy as jnp
+
+    a = weights.gen_input_u8(f"qp/a/{seed}", (n,))
+    b = weights.gen_input_u8(f"qp/b/{seed}", (n,))
+    p = jnp.array([zpa, zpb, ma, mb, sh, 128, 0, 255], jnp.int32)
+    y = np.asarray(qadd(a, b, p))
+    np.testing.assert_array_equal(y, ref.qadd_ref(a, b, np.asarray(p)))
+
+
+@settings(**_SETTINGS)
+@given(zp=st.integers(0, 255), n=st.integers(1, 3000), seed=st.integers(0, 10_000))
+def test_nlu_property(zp, n, seed):
+    x = weights.gen_input_u8(f"nlup/{seed}", (n,))
+    y = np.asarray(nlu_sigmoid(x, zp))
+    np.testing.assert_array_equal(y, ref.nlu_sigmoid_ref(x, zp))

@@ -1,0 +1,44 @@
+//! Ablation: **AIU on/off** — §III-B2: "No additional instructions are
+//! required to configure the routing control. This reduces the program
+//! memory footprint and improves the number of operations per cycle."
+//! Measures both effects: program bytes and ops/cycle.
+
+include!("util.rs");
+
+use j3dai::compiler;
+use j3dai::config::ArchConfig;
+use j3dai::models;
+use j3dai::sim;
+
+fn main() {
+    header("Ablation: Automatic Index Unit (AIU)");
+    let on_cfg = ArchConfig::j3dai();
+    let off_cfg = ArchConfig { aiu_enabled: false, ..ArchConfig::j3dai() };
+
+    println!(
+        "{:<14} {:>12} {:>12} {:>9} {:>11} {:>11} {:>9}",
+        "model", "prog B (on)", "prog B (off)", "size +%", "eff (on)", "eff (off)", "ops/cyc -"
+    );
+    for g in [models::paper_mbv1(), models::paper_mbv2(), models::paper_seg()] {
+        let c_on = compiler::compile(&g, &on_cfg).unwrap();
+        let c_off = compiler::compile(&g, &off_cfg).unwrap();
+        let r_on = sim::simulate(&g, &on_cfg).unwrap();
+        let r_off = sim::simulate(&g, &off_cfg).unwrap();
+        let size_pct = 100.0 * (c_off.program_bytes() as f64 / c_on.program_bytes() as f64 - 1.0);
+        let opcyc_drop = 100.0 * (1.0 - r_off.mac_efficiency / r_on.mac_efficiency);
+        println!(
+            "{:<14} {:>12} {:>12} {:>8.1}% {:>10.1}% {:>10.1}% {:>8.2}%",
+            g.name,
+            c_on.program_bytes(),
+            c_off.program_bytes(),
+            size_pct,
+            r_on.mac_efficiency * 100.0,
+            r_off.mac_efficiency * 100.0,
+            opcyc_drop
+        );
+        // both paper claims must hold in the model
+        assert!(c_off.program_bytes() > c_on.program_bytes(), "AIU must shrink programs");
+        assert!(r_off.mac_efficiency <= r_on.mac_efficiency, "AIU must not hurt ops/cycle");
+    }
+    println!("\nablation_aiu bench OK");
+}

@@ -1,0 +1,45 @@
+//! Ablation: **DMPA vs DMA** — the paper's §III-B2 claim that the 1024-bit
+//! CCONNECT transfer "is significantly superior to the limitations of DMA,
+//! which is constrained by the 64-bit width of the system interconnect".
+//! Sweeps transfer sizes (raw bandwidth) and whole-model inference
+//! (end-to-end impact with bus contention across 6 clusters).
+
+include!("util.rs");
+
+use j3dai::config::ArchConfig;
+use j3dai::graph::Shape;
+use j3dai::models;
+use j3dai::sim;
+
+fn main() {
+    header("Ablation: DMPA vs DMA");
+    let cfg = ArchConfig::j3dai();
+
+    println!("raw transfer latency (cycles):");
+    println!("{:>12} {:>10} {:>10} {:>8}", "bytes", "DMPA", "DMA", "speedup");
+    for bytes in [64u64, 1024, 16 * 1024, 256 * 1024, 1_000_000] {
+        let d = cfg.dmpa_cycles(bytes);
+        let m = cfg.dma_cycles(bytes);
+        println!("{bytes:>12} {d:>10} {m:>10} {:>7.1}x", m as f64 / d as f64);
+    }
+    // paper: "1 MB in 1000 clock cycles" order of magnitude with DMPA
+    assert!(cfg.dmpa_cycles(1_000_000) < 10_000);
+    assert!(cfg.dma_cycles(1_000_000) / cfg.dmpa_cycles(1_000_000) >= 15);
+
+    println!("\nend-to-end inference (cycles, with DMA bus contention when DMPA is off):");
+    println!("{:<28} {:>12} {:>12} {:>9}", "model", "DMPA on", "DMPA off", "slowdown");
+    for g in [
+        models::mobilenet_v1(1, 2, Shape::new(96, 128, 3), 100),
+        models::mobilenet_v2(1, 2, Shape::new(96, 128, 3), 100),
+        models::paper_mbv1(),
+        models::paper_mbv2(),
+    ] {
+        let on = sim::simulate(&g, &cfg).unwrap();
+        let off_cfg = ArchConfig { dmpa_enabled: false, ..cfg.clone() };
+        let off = sim::simulate(&g, &off_cfg).unwrap();
+        let slow = off.cycles as f64 / on.cycles as f64;
+        println!("{:<28} {:>12} {:>12} {:>8.2}x", g.name, on.cycles, off.cycles, slow);
+        assert!(slow > 1.5, "{}: DMPA must matter", g.name);
+    }
+    println!("\nablation_dmpa bench OK");
+}

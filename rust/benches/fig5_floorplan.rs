@@ -1,0 +1,27 @@
+//! Bench: regenerate **Fig. 5** — middle/bottom die floorplans from the
+//! component-inventory area model, asserting the paper's constraints
+//! (6 mm^2 analog, everything inside the 4.698 x 3.438 mm outline).
+
+include!("util.rs");
+
+use j3dai::config::ArchConfig;
+use j3dai::power::area;
+use j3dai::report;
+
+fn main() {
+    header("Fig. 5 reproduction — die floorplans");
+    let cfg = ArchConfig::j3dai();
+    let mid = area::middle_die(&cfg);
+    let bot = area::bottom_die(&cfg);
+    print!("{}", report::render_floorplan(&mid));
+    print!("{}", report::render_floorplan(&bot));
+
+    assert!((mid.regions[0].mm2 - 6.0).abs() < 1e-9, "paper: 6 mm^2 analog readout");
+    assert!(mid.used_mm2() <= mid.outline_mm2, "middle die must close");
+    assert!(bot.used_mm2() <= bot.outline_mm2, "bottom die must close");
+    // L2 split: 3 MB bottom vs 2 MB middle -> bottom L2 region is larger
+    let l2m = mid.regions.iter().find(|r| r.name.starts_with("L2")).unwrap().mm2;
+    let l2b = bot.regions.iter().find(|r| r.name.starts_with("L2")).unwrap().mm2;
+    assert!(l2b > l2m);
+    println!("\nfig5 bench OK");
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate **Fig. 6** — at-scale chip-size comparison of the
+//! two SONY stacked sensors and J3DAI (124 / 262 / 48 mm^2 stacked).
+
+include!("util.rs");
+
+use j3dai::power::area;
+use j3dai::report;
+
+fn main() {
+    header("Fig. 6 reproduction — chip sizes at scale");
+    print!("{}", report::render_fig6());
+
+    let chips = area::fig6_chips();
+    let stacked: Vec<f64> = chips.iter().map(|c| c.area_mm2() * c.layers as f64).collect();
+    println!("stacked areas: {stacked:.1?} (paper: [124, 262, 48])");
+    assert!((stacked[0] - 124.0).abs() < 0.5);
+    assert!((stacked[1] - 262.0).abs() < 0.5);
+    assert!((stacked[2] - 48.0).abs() < 0.5);
+    assert!(chips[2].area_mm2() < chips[0].area_mm2() && chips[2].area_mm2() < chips[1].area_mm2());
+    println!("\nfig6 bench OK");
+}

@@ -1,0 +1,57 @@
+//! Perf bench: wallclock of the L3 hot paths — compile, cycle-sim,
+//! functional PE model, and PJRT inference. The §Perf targets in
+//! EXPERIMENTS.md are tracked here (simulator >= 1e8 modeled MACs/s,
+//! full-model sim well under 1 s).
+
+include!("util.rs");
+
+use j3dai::config::ArchConfig;
+use j3dai::models;
+use j3dai::runtime::{self, Runtime};
+use j3dai::sim;
+use j3dai::sim::functional::{self, Tensor};
+
+fn main() {
+    header("perf: compile + simulate wallclock");
+    let cfg = ArchConfig::j3dai();
+    for g in [models::paper_mbv1(), models::paper_mbv2(), models::paper_seg()] {
+        let (mean, min) = time_ms(5, || {
+            let _ = sim::simulate(&g, &cfg).unwrap();
+        });
+        let r = sim::simulate(&g, &cfg).unwrap();
+        let macs_per_s = r.total_macs as f64 / (min / 1e3);
+        println!(
+            "{:<14} {:>7.1} ms mean / {:>7.1} ms min  -> {:.2e} modeled MACs/s",
+            g.name, mean, min, macs_per_s
+        );
+        assert!(min < 1000.0, "full-model sim must stay under 1 s");
+        assert!(macs_per_s > 1e8, "simulator throughput target (EXPERIMENTS.md §Perf)");
+    }
+
+    header("perf: functional PE model (tinycnn, full integer interpret)");
+    let g = models::artifact_graph("tinycnn_24x32").unwrap();
+    let x = functional::synthetic_input("tinycnn_24x32", g.input);
+    let (mean, min) = time_ms(10, || {
+        let _ = functional::run_final(&g, &x);
+    });
+    println!("tinycnn functional: {mean:.2} ms mean / {min:.2} ms min");
+
+    header("perf: PJRT inference service time");
+    if runtime::default_artifact_dir().join("manifest.txt").exists() {
+        let mut rt = Runtime::new().unwrap();
+        rt.load_all(&runtime::default_artifact_dir()).unwrap();
+        for name in ["tinycnn_24x32", "mbv1_w25_48x64", "fpnseg_w25_48x64"] {
+            let e = rt.entry(name).unwrap().clone();
+            let frame = Tensor::new(e.input_shape, std::fs::read(&e.input_path).unwrap());
+            // warmup
+            let _ = rt.infer(name, &frame).unwrap();
+            let (mean, min) = time_ms(20, || {
+                let _ = rt.infer(name, &frame).unwrap();
+            });
+            println!("{name:<18} {mean:>7.2} ms mean / {min:>7.2} ms min per inference");
+        }
+    } else {
+        println!("artifacts not built — skipping PJRT timing");
+    }
+    println!("\nperf_sim bench OK");
+}

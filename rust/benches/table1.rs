@@ -1,0 +1,39 @@
+//! Bench: regenerate **Table I** — key performance metrics of the three
+//! paper workloads (MMACs, latency @200 MHz, power @30/200 FPS, TOPs/W,
+//! MAC/cycle efficiency), printed next to the paper's reported values.
+
+include!("util.rs");
+
+use j3dai::config::ArchConfig;
+use j3dai::models;
+use j3dai::power::EnergyModel;
+use j3dai::{report, sim};
+
+fn main() {
+    header("TABLE I reproduction (full compile + cycle simulation)");
+    let cfg = ArchConfig::j3dai();
+    let em = EnergyModel::fdsoi28();
+
+    let mut rows = Vec::new();
+    for (g, input) in [
+        (models::paper_mbv1(), "256x192"),
+        (models::paper_mbv2(), "256x192"),
+        (models::paper_seg(), "512x384"),
+    ] {
+        let (mean, min) = time_ms(3, || {
+            let _ = sim::simulate(&g, &cfg).unwrap();
+        });
+        let r = sim::simulate(&g, &cfg).unwrap();
+        println!("simulated {} in {mean:.1} ms (min {min:.1} ms) wallclock", g.name);
+        rows.push(report::table1_row(&r, &em, input));
+    }
+    println!();
+    print!("{}", report::render_table1(&rows));
+
+    // machine-checkable acceptance of the reproduction shape
+    assert!(rows[0].latency_ms < rows[2].latency_ms);
+    assert!(rows[1].latency_ms < rows[0].latency_ms);
+    assert!(rows[0].mac_eff > rows[1].mac_eff + 0.15);
+    assert!(rows[2].power_mw_200.is_none(), "seg must not sustain 200 FPS");
+    println!("\ntable1 bench OK");
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate **Table II** — the cross-chip comparison. The SONY
+//! columns are the paper's reported constants (it is a literature
+//! comparison in the paper too); the J3DAI column is computed end-to-end
+//! by our compiler + simulator + power/area models on MobileNetV2.
+
+include!("util.rs");
+
+use j3dai::config::ArchConfig;
+use j3dai::models;
+use j3dai::power::EnergyModel;
+use j3dai::{report, sim};
+
+fn main() {
+    header("TABLE II reproduction");
+    let cfg = ArchConfig::j3dai();
+    let em = EnergyModel::fdsoi28();
+    let mbv2 = sim::simulate(&models::paper_mbv2(), &cfg).unwrap();
+
+    let mut cols = report::sony_columns();
+    cols.push(report::j3dai_column(&cfg, &mbv2, &em));
+    print!("{}", report::render_table2(&cols));
+
+    let j = cols.last().unwrap();
+    println!("\npaper J3DAI column: eff 46.6%, 186.7 mW, 3.01 ms, 0.62 TOPS/W, 12.9 GOPS/W/mm2");
+    println!(
+        "ours:               eff {:.1}%, {:.1} mW, {:.2} ms, {:.2} TOPS/W, {:.1} GOPS/W/mm2",
+        j.mac_eff_pct,
+        j.power_mw_200fps.unwrap(),
+        j.time_ms_262.unwrap(),
+        j.tops_per_w.unwrap(),
+        j.gops_w_mm2().unwrap()
+    );
+
+    // the paper's comparative claims must hold
+    for sony in &cols[..2] {
+        assert!(j.gops_w_mm2().unwrap() > sony.gops_w_mm2().unwrap(), "J3DAI must win GOPS/W/mm2");
+        assert!(j.chip_mm2 < sony.chip_mm2, "J3DAI must be most compact");
+        assert!(j.power_mw_200fps.unwrap() > sony.power_mw_200fps.unwrap(), "J3DAI has highest power in the paper");
+    }
+    println!("\ntable2 bench OK");
+}

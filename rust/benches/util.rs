@@ -1,0 +1,24 @@
+// Shared helpers for the harness-less benches (no criterion offline).
+// Each bench `include!`s this file.
+
+use std::time::Instant;
+
+/// Time a closure over `iters` iterations; returns (mean_ms, min_ms).
+#[allow(dead_code)]
+pub fn time_ms<F: FnMut()>(iters: u32, mut f: F) -> (f64, f64) {
+    let mut min = f64::MAX;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        total += ms;
+        min = min.min(ms);
+    }
+    (total / iters as f64, min)
+}
+
+#[allow(dead_code)]
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

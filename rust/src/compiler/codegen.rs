@@ -1,0 +1,342 @@
+//! Codegen — emit per-cluster macro-op programs from the layer maps.
+//!
+//! Loop structure per GEMM layer (output-stationary, the paper's
+//! "computing process" with masked parameter loads):
+//!
+//! ```text
+//! for tm in M-tiles:              # rows of this cluster's slice
+//!     dmpa.load act(tm)           # xfer engine — overlaps previous tile
+//!     for tn in N-tiles:
+//!         for tk in K-tiles:
+//!             dmpa.load w(tn,tk)  # prefetched ahead of the MACs
+//!             conv.tile bm x bk x bn
+//!     sync                        # step boundary: max(xfer, compute)
+//! dmpa.store out
+//! ```
+//!
+//! With the AIU enabled, one `aiu.loop` instruction per loop level replaces
+//! the per-tile routing configuration; with it disabled a `route.cfg` is
+//! emitted before every tile — reproducing the §III-B2 program-footprint
+//! and ops/cycle claims.
+
+use crate::config::ArchConfig;
+use crate::graph::{Graph, Op, INPUT};
+use crate::isa::{Instr, Program, Space};
+
+use super::mapper::LayerMap;
+
+/// Address of a layer's L2 activation buffer — codegen uses logical
+/// addresses (the placement stage owns physical ones; the simulator only
+/// needs spaces + sizes).
+fn act_space(_g: &Graph, _li: usize) -> Space {
+    Space::L2Bottom
+}
+
+/// Which L2 partition a layer's parameters were placed in: big late-model
+/// tensors spill to the middle die. Codegen receives this from placement
+/// through the layer map in a full implementation; here parameters beyond
+/// the bottom partition budget were marked by the mapper.
+fn param_space(middle: bool) -> Space {
+    if middle { Space::L2Middle } else { Space::L2Bottom }
+}
+
+/// Emit the load instruction for the selected transfer engine.
+fn load(use_dmpa: bool, src: Space, bytes: u64) -> Instr {
+    let bytes = bytes.min(u32::MAX as u64) as u32;
+    if use_dmpa {
+        Instr::DmpaLoad { src, src_addr: 0, dst_addr: 0, bytes }
+    } else {
+        Instr::DmaLoad { src, src_addr: 0, dst_addr: 0, bytes }
+    }
+}
+
+fn store(use_dmpa: bool, dst: Space, bytes: u64) -> Instr {
+    let bytes = bytes.min(u32::MAX as u64) as u32;
+    if use_dmpa {
+        Instr::DmpaStore { dst, dst_addr: 0, src_addr: 0, bytes }
+    } else {
+        Instr::DmaStore { dst, dst_addr: 0, src_addr: 0, bytes }
+    }
+}
+
+/// Split `n` into `parts` contiguous chunks (first chunks get the remainder).
+fn chunks(n: usize, parts: usize) -> Vec<usize> {
+    super::mapper::split_rows(n, parts)
+}
+
+/// Emit all cluster programs for the graph.
+pub fn emit(g: &Graph, cfg: &ArchConfig, maps: &[LayerMap]) -> crate::Result<Vec<Program>> {
+    let mut programs: Vec<Program> = (0..cfg.clusters).map(|_| Program::default()).collect();
+    let lanes = cfg.cluster_macs_per_cycle() as usize;
+
+    for map in maps {
+        let l = &g.layers[map.layer];
+        let in_shape = if l.inputs[0] == INPUT { g.input } else { g.layers[l.inputs[0]].out_shape };
+        // Parameters spill to the middle die for large models: approximate
+        // the placement's decision by size (exact partition comes from the
+        // placement stage; the simulator only cares about TSV crossings).
+        let params_middle = l.param_bytes > 256 * 1024;
+
+        match &l.op {
+            Op::Conv { .. } | Op::Dense { .. } => {
+                let split_n = map.m / cfg.clusters < 32; // mapper's movement rule
+                let n_chunks = chunks(map.n, cfg.clusters);
+                for (ci, prog) in programs.iter_mut().enumerate() {
+                    let (m_c, n_c) = if split_n {
+                        (map.m, n_chunks[ci])
+                    } else {
+                        (map.m_per_cluster[ci], map.n)
+                    };
+                    if m_c == 0 || n_c == 0 {
+                        continue;
+                    }
+                    emit_gemm(prog, cfg, map, m_c, n_c, in_shape.elems(), split_n, params_middle, lanes);
+                }
+            }
+            Op::DwConv { stride } => {
+                let rows = chunks(l.out_shape.h, cfg.clusters);
+                for (ci, prog) in programs.iter_mut().enumerate() {
+                    let h_c = rows[ci];
+                    if h_c == 0 {
+                        continue;
+                    }
+                    let w = l.out_shape.w;
+                    let c = l.out_shape.c;
+                    // input slab incl. halo at the producing stride
+                    let in_rows = h_c * stride + 2;
+                    let in_bytes = (in_rows * in_shape.w * in_shape.c) as u64;
+                    if cfg.aiu_enabled {
+                        prog.instrs.push(Instr::AiuLoop { reg: 0, count: h_c as u32, stride: w as u32 });
+                    }
+                    prog.instrs.push(load(map.use_dmpa, param_space(false), (9 * c + 4 * c) as u64));
+                    prog.instrs.push(load(map.use_dmpa, act_space(g, map.layer), in_bytes));
+                    prog.instrs.push(Instr::Sync);
+                    for c0 in (0..c).step_by(lanes) {
+                        let c_tile = lanes.min(c - c0);
+                        if !cfg.aiu_enabled {
+                            prog.instrs.push(Instr::RouteCfg { pattern: 1 });
+                        }
+                        prog.instrs.push(Instr::DwTile { h: h_c as u32, w: w as u32, c: c_tile as u32, stride: *stride as u8 });
+                    }
+                    prog.instrs.push(Instr::Sync);
+                    prog.instrs.push(store(map.use_dmpa, act_space(g, map.layer), (h_c * w * c) as u64));
+                    prog.instrs.push(Instr::Sync);
+                }
+            }
+            Op::Add => {
+                let parts = chunks(l.out_shape.elems(), cfg.clusters);
+                for (ci, prog) in programs.iter_mut().enumerate() {
+                    let n = parts[ci];
+                    if n == 0 {
+                        continue;
+                    }
+                    prog.instrs.push(load(map.use_dmpa, act_space(g, map.layer), 2 * n as u64));
+                    prog.instrs.push(Instr::Sync);
+                    if !cfg.aiu_enabled {
+                        prog.instrs.push(Instr::RouteCfg { pattern: 2 });
+                    }
+                    prog.instrs.push(Instr::AddTile { n: n as u32 });
+                    prog.instrs.push(Instr::Sync);
+                    prog.instrs.push(store(map.use_dmpa, act_space(g, map.layer), n as u64));
+                    prog.instrs.push(Instr::Sync);
+                }
+            }
+            Op::NluSigmoid => {
+                let parts = chunks(l.out_shape.elems(), cfg.clusters);
+                for (ci, prog) in programs.iter_mut().enumerate() {
+                    let n = parts[ci];
+                    if n == 0 {
+                        continue;
+                    }
+                    prog.instrs.push(load(map.use_dmpa, act_space(g, map.layer), n as u64));
+                    prog.instrs.push(Instr::Sync);
+                    prog.instrs.push(Instr::ActTile { n: n as u32, nlu: true });
+                    prog.instrs.push(Instr::Sync);
+                    prog.instrs.push(store(map.use_dmpa, act_space(g, map.layer), n as u64));
+                    prog.instrs.push(Instr::Sync);
+                }
+            }
+            Op::GlobalAvgPool => {
+                // channels across clusters
+                let parts = chunks(in_shape.c, cfg.clusters);
+                for (ci, prog) in programs.iter_mut().enumerate() {
+                    let c = parts[ci];
+                    if c == 0 {
+                        continue;
+                    }
+                    let n = in_shape.h * in_shape.w * c;
+                    prog.instrs.push(load(map.use_dmpa, act_space(g, map.layer), n as u64));
+                    prog.instrs.push(Instr::Sync);
+                    prog.instrs.push(Instr::PoolTile { h: in_shape.h as u32, w: in_shape.w as u32, c: c as u32 });
+                    prog.instrs.push(Instr::Sync);
+                    prog.instrs.push(store(map.use_dmpa, act_space(g, map.layer), c as u64));
+                    prog.instrs.push(Instr::Sync);
+                }
+            }
+            Op::Upsample2x { to_h, to_w } => {
+                // pure DMPA data movement: strided read, replicated write
+                let rows = chunks(*to_h, cfg.clusters);
+                for (ci, prog) in programs.iter_mut().enumerate() {
+                    let h_c = rows[ci];
+                    if h_c == 0 {
+                        continue;
+                    }
+                    let bytes_out = (h_c * to_w * l.out_shape.c) as u64;
+                    prog.instrs.push(load(map.use_dmpa, act_space(g, map.layer), bytes_out / 4));
+                    prog.instrs.push(store(map.use_dmpa, act_space(g, map.layer), bytes_out));
+                    prog.instrs.push(Instr::Sync);
+                }
+            }
+        }
+    }
+    for prog in &mut programs {
+        prog.instrs.push(Instr::Halt);
+    }
+    Ok(programs)
+}
+
+/// Emit one cluster's share of a GEMM layer.
+#[allow(clippy::too_many_arguments)]
+fn emit_gemm(
+    prog: &mut Program,
+    cfg: &ArchConfig,
+    map: &LayerMap,
+    m_c: usize,
+    n_c: usize,
+    in_elems: usize,
+    split_n: bool,
+    params_middle: bool,
+    lanes: usize,
+) {
+    let (bm, bk, bn) = (map.bm.min(m_c), map.bk, map.bn.min(n_c));
+    let k = map.k;
+    let tiles_m = m_c.div_ceil(bm);
+    let tiles_n = n_c.div_ceil(bn);
+    let tiles_k = k.div_ceil(bk);
+    let _ = lanes;
+
+    // activation slice for this cluster: its M rows (K-wide reads are
+    // generated by the AGU from the fmap slice, charged once)
+    let act_bytes = if split_n { in_elems as u64 } else { (in_elems / map.m.max(1)) as u64 * m_c as u64 };
+
+    if cfg.aiu_enabled {
+        // one hardware loop per level drives routing for the whole layer
+        prog.instrs.push(Instr::AiuLoop { reg: 0, count: tiles_m as u32, stride: bm as u32 });
+        prog.instrs.push(Instr::AiuLoop { reg: 1, count: (tiles_n * tiles_k) as u32, stride: bn as u32 });
+    }
+    // biases travel with the first weight tile
+    let bias_bytes = 4 * n_c as u64;
+    prog.instrs.push(load(map.use_dmpa, param_space(params_middle), bias_bytes));
+
+    for tm in 0..tiles_m {
+        let bm_eff = bm.min(m_c - tm * bm);
+        // per-m-tile activation load (xfer engine; overlaps previous step)
+        prog.instrs.push(load(map.use_dmpa, Space::L2Bottom, act_bytes / tiles_m as u64));
+        for tn in 0..tiles_n {
+            let bn_eff = bn.min(n_c - tn * bn);
+            for tk in 0..tiles_k {
+                let bk_eff = bk.min(k - tk * bk);
+                // weight tile prefetch (reloaded per m-tile: output-stationary)
+                prog.instrs.push(load(
+                    map.use_dmpa,
+                    param_space(params_middle),
+                    (bk_eff * bn_eff) as u64,
+                ));
+                if !cfg.aiu_enabled {
+                    prog.instrs.push(Instr::RouteCfg { pattern: 0 });
+                }
+                prog.instrs.push(Instr::ConvTile {
+                    m: bm_eff as u32,
+                    k: bk_eff as u32,
+                    n: bn_eff as u32,
+                    first: tk == 0,
+                    last: tk == tiles_k - 1,
+                });
+            }
+        }
+        prog.instrs.push(Instr::Sync);
+    }
+    prog.instrs.push(store(map.use_dmpa, Space::L2Bottom, (m_c * n_c) as u64));
+    prog.instrs.push(Instr::Sync);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::mapper;
+    use crate::graph::Shape;
+    use crate::models;
+
+    fn compile_programs(g: &Graph, cfg: &ArchConfig) -> Vec<Program> {
+        let p = mapper::place_memory(g, cfg).unwrap();
+        let maps = mapper::map_layers(g, cfg, &p).unwrap();
+        emit(g, cfg, &maps).unwrap()
+    }
+
+    #[test]
+    fn every_cluster_halts() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        for p in compile_programs(&g, &cfg) {
+            assert_eq!(p.instrs.last(), Some(&Instr::Halt));
+        }
+    }
+
+    #[test]
+    fn gemm_macs_conserved_under_tiling() {
+        let g = models::paper_mbv1();
+        let cfg = ArchConfig::j3dai();
+        let progs = compile_programs(&g, &cfg);
+        let emitted: u64 = progs.iter().map(|p| p.total_macs()).sum();
+        assert_eq!(emitted, g.total_macs());
+    }
+
+    #[test]
+    fn dense_layer_splits_over_n() {
+        // fc of MBv1: m=1 -> split N; every cluster gets some outputs
+        let g = models::paper_mbv1();
+        let cfg = ArchConfig::j3dai();
+        let progs = compile_programs(&g, &cfg);
+        // every cluster program ends with work for the dense layer (the fc
+        // ConvTile has m=1)
+        for p in &progs {
+            let has_m1 = p.instrs.iter().any(|i| matches!(i, Instr::ConvTile { m: 1, .. }));
+            assert!(has_m1, "dense not split across clusters");
+        }
+    }
+
+    #[test]
+    fn route_cfg_only_without_aiu() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let on = compile_programs(&g, &ArchConfig::j3dai());
+        let off_cfg = ArchConfig { aiu_enabled: false, ..ArchConfig::j3dai() };
+        let off = compile_programs(&g, &off_cfg);
+        let count = |ps: &[Program]| {
+            ps.iter().flat_map(|p| &p.instrs).filter(|i| matches!(i, Instr::RouteCfg { .. })).count()
+        };
+        assert_eq!(count(&on), 0);
+        assert!(count(&off) > 0);
+        let aiu = |ps: &[Program]| {
+            ps.iter().flat_map(|p| &p.instrs).filter(|i| matches!(i, Instr::AiuLoop { .. })).count()
+        };
+        assert!(aiu(&on) > 0);
+        assert_eq!(aiu(&off), 0);
+    }
+
+    #[test]
+    fn dma_fallback_uses_dma_ops() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig { dmpa_enabled: false, ..ArchConfig::j3dai() };
+        let progs = compile_programs(&g, &cfg);
+        let any_dmpa = progs.iter().flat_map(|p| &p.instrs).any(|i| matches!(i, Instr::DmpaLoad { .. } | Instr::DmpaStore { .. }));
+        assert!(!any_dmpa);
+    }
+
+    #[test]
+    fn sync_separates_tile_steps() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let progs = compile_programs(&g, &ArchConfig::j3dai());
+        let syncs = progs[0].instrs.iter().filter(|i| matches!(i, Instr::Sync)).count();
+        assert!(syncs >= 3, "expected per-step barriers, got {syncs}");
+    }
+}

@@ -1,0 +1,148 @@
+//! The Aidge-export analog (paper Fig. 4): map a quantized [`Graph`] onto
+//! the accelerator and emit per-cluster [`Program`]s plus a host program.
+//!
+//! Pipeline stages, mirroring §III-C2:
+//!  1. **Mapping solver** ([`mapper`]) — explores tile-size candidates per
+//!     layer, checks the NCB SRAM budget, scores data movement + PE
+//!     utilization, picks the best placement and the DMPA/DMA transfer
+//!     engine per tensor.
+//!  2. **Scheduling solver** ([`scheduler`]) — arranges transfers to mask
+//!     parameter loading behind computation (double buffering) and inserts
+//!     the synchronization barriers the engines need.
+//!  3. **Codegen** ([`codegen`]) — emits the macro-op programs (with AIU
+//!     loop setup, or explicit RouteCfg instructions when the AIU is
+//!     disabled) and the host descriptor program.
+
+pub mod codegen;
+pub mod mapper;
+pub mod scheduler;
+
+use crate::config::ArchConfig;
+use crate::graph::Graph;
+use crate::isa::Program;
+
+/// Where a tensor lives in L2 (the memory-placement decision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct L2Alloc {
+    /// Offset in the unified L2 address space.
+    pub addr: u32,
+    pub bytes: u32,
+    /// True if placed in the middle-die partition (crosses TSVs).
+    pub middle: bool,
+}
+
+/// Compiled artifact: one program per cluster + metadata.
+#[derive(Debug, Clone)]
+pub struct Compiled {
+    pub model: String,
+    /// One macro-op program per cluster.
+    pub cluster_programs: Vec<Program>,
+    /// Host-side per-layer descriptor schedule (layer name, sync cost).
+    pub host_steps: Vec<HostStep>,
+    /// Mapping report (per layer) for the compile_report example / tests.
+    pub layer_maps: Vec<mapper::LayerMap>,
+    /// Parameter bytes placed in L2 (by the memory-placement stage).
+    pub param_bytes: u64,
+    /// Peak activation bytes resident in L2.
+    pub peak_activation_bytes: u64,
+}
+
+/// One host-program step (descriptor writes + interrupt wait per layer).
+#[derive(Debug, Clone)]
+pub struct HostStep {
+    pub layer: String,
+    /// Host cycles spent writing descriptors / polling sync registers.
+    pub host_cycles: u64,
+}
+
+impl Compiled {
+    /// Total encoded program size across clusters (the AIU footprint claim).
+    pub fn program_bytes(&self) -> usize {
+        self.cluster_programs.iter().map(|p| p.size_bytes()).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.cluster_programs.iter().map(|p| p.total_macs()).sum()
+    }
+}
+
+/// Compile a graph for an architecture — the full Fig. 4 flow.
+pub fn compile(g: &Graph, cfg: &ArchConfig) -> crate::Result<Compiled> {
+    g.validate()?;
+    cfg.validate()?;
+    let placement = mapper::place_memory(g, cfg)?;
+    let maps = mapper::map_layers(g, cfg, &placement)?;
+    let programs = codegen::emit(g, cfg, &maps)?;
+    let host_steps = scheduler::host_schedule(g, cfg);
+    // MAC conservation: the emitted programs must perform exactly the
+    // graph's MACs (the mapper may not drop or duplicate work).
+    let emitted: u64 = programs.iter().map(|p| p.total_macs()).sum();
+    anyhow::ensure!(
+        emitted == g.total_macs(),
+        "MAC mismatch: graph={} emitted={}",
+        g.total_macs(),
+        emitted
+    );
+    Ok(Compiled {
+        model: g.name.clone(),
+        cluster_programs: programs,
+        host_steps,
+        param_bytes: placement.param_bytes,
+        peak_activation_bytes: placement.peak_activation_bytes,
+        layer_maps: maps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+    use crate::models;
+
+    #[test]
+    fn compile_tinycnn() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        let c = compile(&g, &cfg).unwrap();
+        assert_eq!(c.cluster_programs.len(), 6);
+        assert_eq!(c.total_macs(), g.total_macs());
+        assert!(c.program_bytes() > 0);
+        assert_eq!(c.host_steps.len(), g.layers.len());
+    }
+
+    #[test]
+    fn compile_all_paper_models() {
+        let cfg = ArchConfig::j3dai();
+        for g in [models::paper_mbv1(), models::paper_mbv2(), models::paper_seg()] {
+            let c = compile(&g, &cfg).unwrap();
+            assert_eq!(c.total_macs(), g.total_macs(), "{}", g.name);
+            // parameters must fit the 5 MB L2 alongside peak activations
+            let cap = (cfg.l2_bytes() + cfg.local_sram_bytes() / 2) as u64;
+            assert!(c.param_bytes + c.peak_activation_bytes <= cap, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn aiu_off_grows_program() {
+        let g = models::paper_mbv1();
+        let on = compile(&g, &ArchConfig::j3dai()).unwrap();
+        let cfg_off = ArchConfig { aiu_enabled: false, ..ArchConfig::j3dai() };
+        let off = compile(&g, &cfg_off).unwrap();
+        assert!(
+            off.program_bytes() > on.program_bytes(),
+            "AIU must shrink programs: on={} off={}",
+            on.program_bytes(),
+            off.program_bytes()
+        );
+    }
+
+    #[test]
+    fn scaled_config_still_conserves_macs() {
+        let g = models::mobilenet_v1(1, 4, Shape::new(48, 64, 3), 100);
+        for cl in [1, 3, 6, 8] {
+            let cfg = ArchConfig::scaled(cl, 16, 8);
+            let c = compile(&g, &cfg).unwrap();
+            assert_eq!(c.total_macs(), g.total_macs(), "clusters={cl}");
+        }
+    }
+}

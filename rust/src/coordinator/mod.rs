@@ -1,0 +1,209 @@
+//! Frame-loop coordinator — the "system software" tying the sensor model,
+//! the cycle simulator and the PJRT functional path into a running service.
+//!
+//! Pipeline (std threads + channels; the offline registry has no tokio):
+//!
+//! ```text
+//! [sensor thread] --frames--> [inference worker] --records--> [caller]
+//!      |  FPS governor             | PJRT infer (functional output)
+//!      |  (30 / 200 FPS)           | cycle-sim stats (latency/energy)
+//! ```
+//!
+//! The worker executes the *AOT JAX artifact* through PJRT — python never
+//! runs here — while accounting latency/energy with the cycle simulator's
+//! per-inference numbers, exactly how the real chip would pair its DNN
+//! accelerator with its host runtime.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::config::ArchConfig;
+use crate::graph::Shape;
+use crate::power::EnergyModel;
+use crate::runtime::Runtime;
+use crate::sensor::PixelArray;
+use crate::sim::{self, SimResult};
+
+/// One processed frame.
+#[derive(Debug, Clone)]
+pub struct FrameRecord {
+    pub frame_idx: u64,
+    /// argmax class (classifiers) or dominant class (segmentation).
+    pub top_class: usize,
+    /// wall-clock service time of the PJRT execution.
+    pub service_us: f64,
+    /// modeled accelerator latency (from the cycle simulator), ms.
+    pub modeled_latency_ms: f64,
+    /// modeled energy of this inference, mJ.
+    pub modeled_energy_mj: f64,
+}
+
+/// Aggregated run statistics.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub model: String,
+    pub frames: u64,
+    pub wall_s: f64,
+    pub achieved_fps: f64,
+    pub mean_service_us: f64,
+    pub p99_service_us: f64,
+    pub modeled_latency_ms: f64,
+    pub modeled_power_mw_at_fps: f64,
+    pub records: Vec<FrameRecord>,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub target_fps: f64,
+    pub frames: u64,
+    pub arch: ArchConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { target_fps: 30.0, frames: 30, arch: ArchConfig::j3dai() }
+    }
+}
+
+/// The running service.
+pub struct Coordinator {
+    runtime: Runtime,
+    energy: EnergyModel,
+    cfg: CoordinatorConfig,
+}
+
+impl Coordinator {
+    /// Load all artifacts from `dir` and pre-simulate each model.
+    pub fn new(dir: &Path, cfg: CoordinatorConfig) -> crate::Result<Self> {
+        let mut runtime = Runtime::new()?;
+        let n = runtime.load_all(dir)?;
+        anyhow::ensure!(n > 0, "no artifacts in {}", dir.display());
+        log::info!("coordinator: loaded {n} artifacts on {}", runtime.platform());
+        Ok(Coordinator { runtime, energy: EnergyModel::fdsoi28(), cfg })
+    }
+
+    /// Cycle-simulate the graph twin of an artifact model.
+    pub fn presimulate(&self, name: &str) -> crate::Result<SimResult> {
+        let g = crate::models::artifact_graph(name)
+            .ok_or_else(|| anyhow::anyhow!("no graph twin for artifact {name}"))?;
+        sim::simulate(&g, &self.cfg.arch)
+    }
+
+    /// Run the frame loop for one model; returns aggregated stats.
+    pub fn run_model(&self, name: &str) -> crate::Result<RunStats> {
+        let entry = self
+            .runtime
+            .entry(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name} not loaded"))?
+            .clone();
+        let simr = self.presimulate(name)?;
+        let energy_mj = self.energy.inference_mj(&simr.activity);
+
+        // sensor thread: paced frame production with backpressure (bounded
+        // channel of 2 frames — the double-buffered L2 frame slots)
+        let (tx, rx) = mpsc::sync_channel::<(u64, crate::sim::functional::Tensor)>(2);
+        let frames = self.cfg.frames;
+        let period = Duration::from_secs_f64(1.0 / self.cfg.target_fps);
+        let shape: Shape = entry.input_shape;
+        let producer = std::thread::spawn(move || {
+            let pixels = PixelArray::new(0x13DA1);
+            let t0 = Instant::now();
+            for i in 0..frames {
+                let due = period * i as u32;
+                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+                let frame = pixels.capture(i, shape);
+                if tx.send((i, frame)).is_err() {
+                    break; // consumer gone
+                }
+            }
+        });
+
+        let mut records = Vec::with_capacity(frames as usize);
+        let t0 = Instant::now();
+        while let Ok((i, frame)) = rx.recv() {
+            let s0 = Instant::now();
+            let out = self.runtime.infer(name, &frame)?;
+            let service_us = s0.elapsed().as_secs_f64() * 1e6;
+            let top_class = argmax_class(&out, &entry.output_dims);
+            records.push(FrameRecord {
+                frame_idx: i,
+                top_class,
+                service_us,
+                modeled_latency_ms: simr.latency_ms,
+                modeled_energy_mj: energy_mj,
+            });
+        }
+        producer.join().map_err(|_| anyhow::anyhow!("sensor thread panicked"))?;
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        let mut service: Vec<f64> = records.iter().map(|r| r.service_us).collect();
+        service.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = service[((service.len() as f64 * 0.99) as usize).min(service.len() - 1)];
+        let mean = service.iter().sum::<f64>() / service.len() as f64;
+        let achieved_fps = records.len() as f64 / wall_s;
+        Ok(RunStats {
+            model: name.to_string(),
+            frames: records.len() as u64,
+            wall_s,
+            achieved_fps,
+            mean_service_us: mean,
+            p99_service_us: p99,
+            modeled_latency_ms: simr.latency_ms,
+            modeled_power_mw_at_fps: self
+                .energy
+                .power_mw(&simr.activity, self.cfg.target_fps.min(simr.max_fps)),
+            records,
+        })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.runtime.model_names().into_iter().map(String::from).collect()
+    }
+}
+
+/// argmax over the class axis: classifiers output (1, C); segmentation
+/// outputs (H, W, C) — we return the most frequent per-pixel argmax.
+pub fn argmax_class(out: &[u8], dims: &[usize]) -> usize {
+    let c = *dims.last().unwrap_or(&1);
+    if c == 0 || out.is_empty() {
+        return 0;
+    }
+    if dims.len() <= 2 {
+        return out.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i % c).unwrap_or(0);
+    }
+    let mut hist = vec![0u32; c];
+    for px in out.chunks_exact(c) {
+        let am = px.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0);
+        hist[am] += 1;
+    }
+    hist.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_classifier() {
+        let out = [1u8, 9, 3];
+        assert_eq!(argmax_class(&out, &[1, 3]), 1);
+    }
+
+    #[test]
+    fn argmax_segmentation_majority() {
+        // two pixels argmax=2, one pixel argmax=0
+        let out = [9u8, 1, 2, 1, 2, 9, 0, 0, 7];
+        assert_eq!(argmax_class(&out, &[1, 3, 3]), 2);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = CoordinatorConfig::default();
+        assert_eq!(c.target_fps, 30.0);
+        assert!(c.frames > 0);
+    }
+}

@@ -1,0 +1,236 @@
+//! Quantized NN graph IR — the representation the Aidge-analog compiler
+//! consumes (the paper's Fig. 4 pipeline starts from an imported ONNX
+//! graph; ours starts here).
+//!
+//! Layers are topologically ordered; each layer names its input layers by
+//! index (index `usize::MAX` denotes the network input). Shape inference,
+//! MAC/parameter accounting and memory footprints are computed on
+//! construction so the mapper/scheduler and the Table I/II benches all draw
+//! from one source of truth.
+
+use std::fmt;
+
+/// Spatial tensor shape (height, width, channels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Shape { h, w, c }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.h, self.w, self.c)
+    }
+}
+
+/// Operator kinds supported by the accelerator (paper §III-B: conventional
+/// CNN ops — convolutions, depthwise, elementwise, pooling, dense).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Op {
+    /// Standard convolution, SAME padding, square kernel.
+    Conv { kh: usize, kw: usize, cout: usize, stride: usize, relu: bool },
+    /// 3x3 depthwise convolution, SAME padding.
+    DwConv { stride: usize },
+    /// Fully connected (1x1 on a 1x1 spatial map).
+    Dense { out: usize },
+    /// Quantized residual add of two inputs.
+    Add,
+    /// Global average pooling to 1x1.
+    GlobalAvgPool,
+    /// 2x nearest-neighbor upsample (cropped to the `to` shape).
+    Upsample2x { to_h: usize, to_w: usize },
+    /// NLU activation through the PWL table (sigmoid approximation).
+    NluSigmoid,
+}
+
+/// One layer instance in the graph.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Unique name; also the weight-stream name prefix (`<name>/w`).
+    pub name: String,
+    pub op: Op,
+    /// Indices of producer layers (`INPUT` = the network input).
+    pub inputs: Vec<usize>,
+    pub out_shape: Shape,
+    /// Multiply-accumulate operations to compute this layer once.
+    pub macs: u64,
+    /// Parameter bytes (int8 weights + int32 biases).
+    pub param_bytes: u64,
+}
+
+/// Marker index for "the network input tensor".
+pub const INPUT: usize = usize::MAX;
+
+/// A full network: ordered layers plus the input descriptor.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>, input: Shape) -> Self {
+        Graph { name: name.into(), input, layers: Vec::new() }
+    }
+
+    fn shape_of(&self, idx: usize) -> Shape {
+        if idx == INPUT { self.input } else { self.layers[idx].out_shape }
+    }
+
+    /// Append a layer; returns its index. Computes shape, MACs and params.
+    pub fn push(&mut self, name: impl Into<String>, op: Op, inputs: Vec<usize>) -> usize {
+        let in_shape = self.shape_of(inputs[0]);
+        let (out_shape, macs, param_bytes) = match &op {
+            Op::Conv { kh, kw, cout, stride, .. } => {
+                let oh = out_dim(in_shape.h, *kh, *stride);
+                let ow = out_dim(in_shape.w, *kw, *stride);
+                let macs = (oh * ow * kh * kw * in_shape.c * cout) as u64;
+                let params = (kh * kw * in_shape.c * cout) as u64 + 4 * *cout as u64;
+                (Shape::new(oh, ow, *cout), macs, params)
+            }
+            Op::DwConv { stride } => {
+                let oh = out_dim(in_shape.h, 3, *stride);
+                let ow = out_dim(in_shape.w, 3, *stride);
+                let macs = (oh * ow * 9 * in_shape.c) as u64;
+                let params = (9 * in_shape.c) as u64 + 4 * in_shape.c as u64;
+                (Shape::new(oh, ow, in_shape.c), macs, params)
+            }
+            Op::Dense { out } => {
+                let k = in_shape.elems();
+                ((Shape::new(1, 1, *out)), (k * out) as u64, (k * out) as u64 + 4 * *out as u64)
+            }
+            Op::Add => {
+                let b = self.shape_of(inputs[1]);
+                assert_eq!(in_shape, b, "Add operands must agree: {in_shape} vs {b}");
+                (in_shape, 0, 0)
+            }
+            Op::GlobalAvgPool => (Shape::new(1, 1, in_shape.c), 0, 0),
+            Op::Upsample2x { to_h, to_w } => {
+                assert!(*to_h <= 2 * in_shape.h && *to_w <= 2 * in_shape.w);
+                (Shape::new(*to_h, *to_w, in_shape.c), 0, 0)
+            }
+            Op::NluSigmoid => (in_shape, 0, 0),
+        };
+        self.layers.push(Layer { name: name.into(), op, inputs, out_shape, macs, param_bytes });
+        self.layers.len() - 1
+    }
+
+    /// Total MAC count (the paper's "MMACs" rows).
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Total parameter bytes.
+    pub fn total_param_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.param_bytes).sum()
+    }
+
+    /// Output shape of the final layer.
+    pub fn output(&self) -> Shape {
+        self.layers.last().expect("empty graph").out_shape
+    }
+
+    /// Number of layers that carry MACs (conv/dw/dense).
+    pub fn compute_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.macs > 0).count()
+    }
+
+    /// Validate topological order and arities.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (i, l) in self.layers.iter().enumerate() {
+            anyhow::ensure!(!l.inputs.is_empty(), "layer {} has no inputs", l.name);
+            for &j in &l.inputs {
+                anyhow::ensure!(j == INPUT || j < i, "layer {} uses later layer {}", l.name, j);
+            }
+            let arity = if matches!(l.op, Op::Add) { 2 } else { 1 };
+            anyhow::ensure!(l.inputs.len() == arity, "layer {} arity {} != {}", l.name, l.inputs.len(), arity);
+        }
+        Ok(())
+    }
+}
+
+/// SAME-padding output size: pad = (k-1)/2 both sides.
+pub fn out_dim(n: usize, k: usize, stride: usize) -> usize {
+    let pad = (k - 1) / 2;
+    (n + 2 * pad - k) / stride + 1
+}
+
+/// Width-multiplier channel rounding — the integer-exact contract shared
+/// with `python/compile/model.py::ch`.
+pub fn ch(c: usize, num: usize, den: usize) -> usize {
+    (((c * num / den) + 4) / 8 * 8).max(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_rounding_contract() {
+        // Twin of python test_models.py::test_channel_rounding_contract.
+        assert_eq!(ch(32, 1, 1), 32);
+        assert_eq!(ch(32, 1, 4), 8);
+        assert_eq!(ch(64, 1, 4), 16);
+        assert_eq!(ch(1024, 1, 4), 256);
+        assert_eq!(ch(32, 1, 2), 16);
+        assert_eq!(ch(512, 1, 2), 256);
+        assert_eq!(ch(3, 1, 1), 8);
+        assert_eq!(ch(1280, 1, 4), 320);
+    }
+
+    #[test]
+    fn conv_shape_and_macs() {
+        let mut g = Graph::new("t", Shape::new(24, 32, 3));
+        let c0 = g.push("conv0", Op::Conv { kh: 3, kw: 3, cout: 8, stride: 2, relu: true }, vec![INPUT]);
+        assert_eq!(g.layers[c0].out_shape, Shape::new(12, 16, 8));
+        assert_eq!(g.layers[c0].macs, (12 * 16 * 9 * 3 * 8) as u64);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn dw_preserves_channels() {
+        let mut g = Graph::new("t", Shape::new(16, 16, 24));
+        let d = g.push("dw", Op::DwConv { stride: 2 }, vec![INPUT]);
+        assert_eq!(g.layers[d].out_shape, Shape::new(8, 8, 24));
+        assert_eq!(g.layers[d].macs, (8 * 8 * 9 * 24) as u64);
+    }
+
+    #[test]
+    fn add_requires_matching_shapes() {
+        let mut g = Graph::new("t", Shape::new(8, 8, 8));
+        let a = g.push("a", Op::Conv { kh: 1, kw: 1, cout: 8, stride: 1, relu: true }, vec![INPUT]);
+        let b = g.push("b", Op::Conv { kh: 1, kw: 1, cout: 8, stride: 1, relu: true }, vec![INPUT]);
+        g.push("add", Op::Add, vec![a, b]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "must agree")]
+    fn add_shape_mismatch_panics() {
+        let mut g = Graph::new("t", Shape::new(8, 8, 8));
+        let a = g.push("a", Op::Conv { kh: 1, kw: 1, cout: 8, stride: 1, relu: true }, vec![INPUT]);
+        let b = g.push("b", Op::Conv { kh: 1, kw: 1, cout: 16, stride: 1, relu: true }, vec![INPUT]);
+        g.push("add", Op::Add, vec![a, b]);
+    }
+
+    #[test]
+    fn same_padding_out_dims() {
+        assert_eq!(out_dim(48, 3, 2), 24);
+        assert_eq!(out_dim(47, 3, 2), 24);
+        assert_eq!(out_dim(48, 3, 1), 48);
+        assert_eq!(out_dim(48, 1, 1), 48);
+        assert_eq!(out_dim(1, 3, 1), 1);
+    }
+}

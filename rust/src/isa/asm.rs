@@ -1,0 +1,181 @@
+//! Text assembler for the macro-op ISA — parses the mnemonic format that
+//! [`super::Program::listing`] prints, so programs can be inspected,
+//! hand-edited and reassembled (the workflow the paper's export gives its
+//! users through the generated "assembly codes").
+
+use super::{Instr, Program, Space};
+
+fn parse_space(s: &str) -> crate::Result<Space> {
+    match s {
+        "L2Bottom" => Ok(Space::L2Bottom),
+        "L2Middle" => Ok(Space::L2Middle),
+        "Local" => Ok(Space::Local),
+        _ => anyhow::bail!("unknown space {s}"),
+    }
+}
+
+fn parse_num(s: &str) -> crate::Result<u32> {
+    let s = s.trim_start_matches("0x");
+    if s.chars().all(|c| c.is_ascii_digit()) && !s.starts_with("0x") {
+        // decimal unless it came with the 0x prefix (stripped above keeps hex digits)
+    }
+    u32::from_str_radix(s, if s.chars().any(|c| c.is_ascii_alphabetic()) { 16 } else { 10 })
+        .or_else(|_| s.parse())
+        .map_err(|e| anyhow::anyhow!("bad number {s}: {e}"))
+}
+
+/// Parse an address token like `L2Bottom:0x1000` or `local:0x0`.
+fn parse_addr(tok: &str) -> crate::Result<(Option<Space>, u32)> {
+    let (sp, addr) = tok.split_once(':').ok_or_else(|| anyhow::anyhow!("bad address {tok}"))?;
+    let space = if sp == "local" { None } else { Some(parse_space(sp)?) };
+    Ok((space, parse_num(addr.trim_start_matches("0x"))?))
+}
+
+/// Parse one listing line (with or without the `NN:` prefix).
+pub fn parse_line(line: &str) -> crate::Result<Option<Instr>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') || line.starts_with("//") {
+        return Ok(None);
+    }
+    // strip "  123: " index prefix
+    let body = match line.split_once(':') {
+        Some((idx, rest)) if idx.trim().chars().all(|c| c.is_ascii_digit()) => rest.trim(),
+        _ => line,
+    };
+    let toks: Vec<&str> = body.split_whitespace().collect();
+    anyhow::ensure!(!toks.is_empty(), "empty instruction");
+    let instr = match toks[0] {
+        "dmpa.load" | "dma.load" => {
+            // "dmpa.load  local:0x0 <- L2Bottom:0x1000 [4096B]"
+            anyhow::ensure!(toks.len() >= 4, "malformed load: {body}");
+            let (_, dst_addr) = parse_addr(toks[1])?;
+            let (src_space, src_addr) = parse_addr(toks[3])?;
+            let src = src_space.ok_or_else(|| anyhow::anyhow!("load source must be L2"))?;
+            let bytes = parse_num(toks[4].trim_start_matches('[').trim_end_matches("B]"))?;
+            if toks[0] == "dmpa.load" {
+                Instr::DmpaLoad { src, src_addr, dst_addr, bytes }
+            } else {
+                Instr::DmaLoad { src, src_addr, dst_addr, bytes }
+            }
+        }
+        "dmpa.store" | "dma.store" => {
+            anyhow::ensure!(toks.len() >= 4, "malformed store: {body}");
+            let (dst_space, dst_addr) = parse_addr(toks[1])?;
+            let dst = dst_space.ok_or_else(|| anyhow::anyhow!("store dest must be L2"))?;
+            let (_, src_addr) = parse_addr(toks[3])?;
+            let bytes = parse_num(toks[4].trim_start_matches('[').trim_end_matches("B]"))?;
+            if toks[0] == "dmpa.store" {
+                Instr::DmpaStore { dst, dst_addr, src_addr, bytes }
+            } else {
+                Instr::DmaStore { dst, dst_addr, src_addr, bytes }
+            }
+        }
+        "aiu.loop" => {
+            // "aiu.loop   r0 count=12 stride=64"
+            let reg: u8 = toks[1].trim_start_matches('r').parse()?;
+            let count = parse_num(toks[2].trim_start_matches("count="))?;
+            let stride = parse_num(toks[3].trim_start_matches("stride="))?;
+            Instr::AiuLoop { reg, count, stride }
+        }
+        "route.cfg" => Instr::RouteCfg { pattern: toks[1].trim_start_matches("pattern=").parse()? },
+        "conv.tile" => {
+            // "conv.tile  64x64x64 first last"
+            let dims: Vec<u32> = toks[1].split('x').map(|d| d.parse().unwrap_or(0)).collect();
+            anyhow::ensure!(dims.len() == 3, "conv.tile needs MxKxN: {body}");
+            Instr::ConvTile {
+                m: dims[0],
+                k: dims[1],
+                n: dims[2],
+                first: toks.contains(&"first"),
+                last: toks.contains(&"last"),
+            }
+        }
+        "dw.tile" => {
+            let dims: Vec<u32> = toks[1].split('x').map(|d| d.parse().unwrap_or(0)).collect();
+            let stride: u8 = toks[2].trim_start_matches('s').parse()?;
+            Instr::DwTile { h: dims[0], w: dims[1], c: dims[2], stride }
+        }
+        "add.tile" => Instr::AddTile { n: parse_num(toks[1].trim_start_matches("n="))? },
+        "act.tile" => Instr::ActTile { n: parse_num(toks[1].trim_start_matches("n="))?, nlu: toks.contains(&"nlu") },
+        "pool.tile" => {
+            let dims: Vec<u32> = toks[1].split('x').map(|d| d.parse().unwrap_or(0)).collect();
+            Instr::PoolTile { h: dims[0], w: dims[1], c: dims[2] }
+        }
+        "sync" => Instr::Sync,
+        "halt" => Instr::Halt,
+        other => anyhow::bail!("unknown mnemonic {other}"),
+    };
+    Ok(Some(instr))
+}
+
+/// Assemble a whole listing back into a [`Program`].
+pub fn assemble_text(text: &str) -> crate::Result<Program> {
+    let mut instrs = Vec::new();
+    for (no, line) in text.lines().enumerate() {
+        match parse_line(line) {
+            Ok(Some(i)) => instrs.push(i),
+            Ok(None) => {}
+            Err(e) => anyhow::bail!("line {}: {e}", no + 1),
+        }
+    }
+    Ok(Program { instrs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler;
+    use crate::config::ArchConfig;
+    use crate::graph::Shape;
+    use crate::models;
+
+    #[test]
+    fn listing_roundtrips_through_assembler() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let c = compiler::compile(&g, &ArchConfig::j3dai()).unwrap();
+        for prog in &c.cluster_programs {
+            let text = prog.listing();
+            let back = assemble_text(&text).unwrap();
+            assert_eq!(prog.instrs, back.instrs);
+        }
+    }
+
+    #[test]
+    fn full_model_listing_roundtrips() {
+        let g = models::paper_mbv2();
+        let c = compiler::compile(&g, &ArchConfig::j3dai()).unwrap();
+        let text = c.cluster_programs[0].listing();
+        let back = assemble_text(&text).unwrap();
+        assert_eq!(c.cluster_programs[0].instrs, back.instrs);
+        // and the binary encoding agrees too
+        assert_eq!(c.cluster_programs[0].assemble(), back.assemble());
+    }
+
+    #[test]
+    fn comments_and_blanks_are_skipped() {
+        let p = assemble_text("# header\n\n// note\nsync\nhalt\n").unwrap();
+        assert_eq!(p.instrs, vec![Instr::Sync, Instr::Halt]);
+    }
+
+    #[test]
+    fn hand_written_program_assembles() {
+        let text = "
+            aiu.loop r0 count=4 stride=64
+            dmpa.load local:0x0 <- L2Bottom:0x1000 [4096B]
+            sync
+            conv.tile 64x27x32 first last
+            dmpa.store L2Middle:0x2000 <- local:0x0 [2048B]
+            halt
+        ";
+        let p = assemble_text(text).unwrap();
+        assert_eq!(p.instrs.len(), 6);
+        assert!(p.instrs[4].crosses_tsv());
+        assert_eq!(p.total_macs(), 64 * 27 * 32);
+    }
+
+    #[test]
+    fn bad_mnemonic_reports_line() {
+        let err = assemble_text("sync\nfrobnicate x\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+    }
+}

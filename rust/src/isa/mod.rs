@@ -1,0 +1,373 @@
+//! Accelerator instruction set — the macro-op "assembly" the Aidge-analog
+//! export emits and the cluster controllers execute.
+//!
+//! The paper's cluster is a SIMD machine: one controller fetches/decodes
+//! and broadcasts control to 16 NCBs; the AGU generates multidimensional
+//! addresses, the AIU drives routing from configurable hardware loops
+//! ("no additional instructions are required to configure the routing"),
+//! and the DMPA/CCONNECT moves 1024-bit columns between L2 and NCB SRAM.
+//! We model the program at the granularity the controller actually
+//! sequences: transfers, tile computations, routing configuration and
+//! synchronization.
+//!
+//! Instructions encode to fixed 16-byte words (opcode + 3 u32 fields +
+//! aux u16s) — the encoding exists so program *size* is measurable (the
+//! AIU's program-memory-footprint claim is one of the paper's points).
+
+pub mod asm;
+
+use std::fmt;
+
+/// Memory spaces addressable by transfers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Space {
+    /// Global L2 memory (bottom-die partition).
+    L2Bottom,
+    /// Global L2 memory (middle-die partition, reached over TSVs).
+    L2Middle,
+    /// NCB-local multi-banked SRAM of this cluster.
+    Local,
+}
+
+/// Which engine executes an instruction — the scheduler overlaps XFER with
+/// COMPUTE (double buffering / "masking parameter loading", §III-C2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Xfer,
+    Compute,
+    Control,
+}
+
+/// One macro-op.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Instr {
+    /// Parallel column transfer through DMPA/CCONNECT (1024 b/cycle).
+    DmpaLoad { src: Space, src_addr: u32, dst_addr: u32, bytes: u32 },
+    DmpaStore { dst: Space, dst_addr: u32, src_addr: u32, bytes: u32 },
+    /// Narrow transfer over the 64-bit system interconnect.
+    DmaLoad { src: Space, src_addr: u32, dst_addr: u32, bytes: u32 },
+    DmaStore { dst: Space, dst_addr: u32, src_addr: u32, bytes: u32 },
+    /// Configure one AIU hardware loop (count/stride); loop register `reg`.
+    AiuLoop { reg: u8, count: u32, stride: u32 },
+    /// Explicit routing configuration (emitted only when the AIU is off —
+    /// the ablation measures the cost the AIU removes).
+    RouteCfg { pattern: u8 },
+    /// GEMM tile on the MAC array: (m x k) activations times (k x n)
+    /// weights, int32 accumulate, fused requant on the final k-slice.
+    ConvTile { m: u32, k: u32, n: u32, first: bool, last: bool },
+    /// Depthwise 3x3 tile over `h x w x c` with stride `s`.
+    DwTile { h: u32, w: u32, c: u32, stride: u8 },
+    /// Elementwise tiles on the PE ALU / NLU.
+    AddTile { n: u32 },
+    ActTile { n: u32, nlu: bool },
+    PoolTile { h: u32, w: u32, c: u32 },
+    /// Barrier: wait until both engines of this cluster are idle.
+    Sync,
+    /// Signal the host (interrupt) and stop.
+    Halt,
+}
+
+impl Instr {
+    /// Which engine sequences this op.
+    pub fn engine(&self) -> Engine {
+        match self {
+            Instr::DmpaLoad { .. }
+            | Instr::DmpaStore { .. }
+            | Instr::DmaLoad { .. }
+            | Instr::DmaStore { .. } => Engine::Xfer,
+            Instr::ConvTile { .. }
+            | Instr::DwTile { .. }
+            | Instr::AddTile { .. }
+            | Instr::ActTile { .. }
+            | Instr::PoolTile { .. } => Engine::Compute,
+            Instr::AiuLoop { .. } | Instr::RouteCfg { .. } | Instr::Sync | Instr::Halt => Engine::Control,
+        }
+    }
+
+    /// Bytes moved by transfer ops (0 for others).
+    pub fn xfer_bytes(&self) -> u64 {
+        match self {
+            Instr::DmpaLoad { bytes, .. }
+            | Instr::DmpaStore { bytes, .. }
+            | Instr::DmaLoad { bytes, .. }
+            | Instr::DmaStore { bytes, .. } => *bytes as u64,
+            _ => 0,
+        }
+    }
+
+    /// True if the transfer crosses the middle-die TSVs.
+    pub fn crosses_tsv(&self) -> bool {
+        matches!(
+            self,
+            Instr::DmpaLoad { src: Space::L2Middle, .. }
+                | Instr::DmpaStore { dst: Space::L2Middle, .. }
+                | Instr::DmaLoad { src: Space::L2Middle, .. }
+                | Instr::DmaStore { dst: Space::L2Middle, .. }
+        )
+    }
+
+    /// MACs performed by compute ops.
+    pub fn macs(&self) -> u64 {
+        match self {
+            Instr::ConvTile { m, k, n, .. } => *m as u64 * *k as u64 * *n as u64,
+            Instr::DwTile { h, w, c, .. } => 9 * *h as u64 * *w as u64 * *c as u64,
+            _ => 0,
+        }
+    }
+
+    fn opcode(&self) -> u8 {
+        match self {
+            Instr::DmpaLoad { .. } => 0x01,
+            Instr::DmpaStore { .. } => 0x02,
+            Instr::DmaLoad { .. } => 0x03,
+            Instr::DmaStore { .. } => 0x04,
+            Instr::AiuLoop { .. } => 0x05,
+            Instr::RouteCfg { .. } => 0x06,
+            Instr::ConvTile { .. } => 0x10,
+            Instr::DwTile { .. } => 0x11,
+            Instr::AddTile { .. } => 0x12,
+            Instr::ActTile { .. } => 0x13,
+            Instr::PoolTile { .. } => 0x14,
+            Instr::Sync => 0x20,
+            Instr::Halt => 0x21,
+        }
+    }
+
+    /// Encode to the fixed 16-byte word.
+    pub fn encode(&self) -> [u8; 16] {
+        fn put(w: &mut [u8; 16], idx: usize, v: u32) {
+            w[idx..idx + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        let mut w = [0u8; 16];
+        w[0] = self.opcode();
+        match self {
+            Instr::DmpaLoad { src, src_addr, dst_addr, bytes }
+            | Instr::DmaLoad { src, src_addr, dst_addr, bytes } => {
+                w[1] = space_code(*src);
+                put(&mut w, 4, *src_addr);
+                put(&mut w, 8, *dst_addr);
+                put(&mut w, 12, *bytes);
+            }
+            Instr::DmpaStore { dst, dst_addr, src_addr, bytes }
+            | Instr::DmaStore { dst, dst_addr, src_addr, bytes } => {
+                w[1] = space_code(*dst);
+                put(&mut w, 4, *dst_addr);
+                put(&mut w, 8, *src_addr);
+                put(&mut w, 12, *bytes);
+            }
+            Instr::AiuLoop { reg, count, stride } => {
+                w[1] = *reg;
+                put(&mut w, 4, *count);
+                put(&mut w, 8, *stride);
+            }
+            Instr::RouteCfg { pattern } => w[1] = *pattern,
+            Instr::ConvTile { m, k, n, first, last } => {
+                w[1] = (*first as u8) | ((*last as u8) << 1);
+                put(&mut w, 4, *m);
+                put(&mut w, 8, *k);
+                put(&mut w, 12, *n);
+            }
+            Instr::DwTile { h, w: ww, c, stride } => {
+                w[1] = *stride;
+                put(&mut w, 4, *h);
+                put(&mut w, 8, *ww);
+                put(&mut w, 12, *c);
+            }
+            Instr::AddTile { n } | Instr::ActTile { n, .. } => {
+                if let Instr::ActTile { nlu, .. } = self {
+                    w[1] = *nlu as u8;
+                }
+                put(&mut w, 4, *n);
+            }
+            Instr::PoolTile { h, w: ww, c } => {
+                put(&mut w, 4, *h);
+                put(&mut w, 8, *ww);
+                put(&mut w, 12, *c);
+            }
+            Instr::Sync | Instr::Halt => {}
+        }
+        w
+    }
+
+    /// Decode from a 16-byte word.
+    pub fn decode(w: &[u8; 16]) -> crate::Result<Instr> {
+        let get = |idx: usize| u32::from_le_bytes(w[idx..idx + 4].try_into().unwrap());
+        Ok(match w[0] {
+            0x01 => Instr::DmpaLoad { src: code_space(w[1])?, src_addr: get(4), dst_addr: get(8), bytes: get(12) },
+            0x02 => Instr::DmpaStore { dst: code_space(w[1])?, dst_addr: get(4), src_addr: get(8), bytes: get(12) },
+            0x03 => Instr::DmaLoad { src: code_space(w[1])?, src_addr: get(4), dst_addr: get(8), bytes: get(12) },
+            0x04 => Instr::DmaStore { dst: code_space(w[1])?, dst_addr: get(4), src_addr: get(8), bytes: get(12) },
+            0x05 => Instr::AiuLoop { reg: w[1], count: get(4), stride: get(8) },
+            0x06 => Instr::RouteCfg { pattern: w[1] },
+            0x10 => Instr::ConvTile { m: get(4), k: get(8), n: get(12), first: w[1] & 1 != 0, last: w[1] & 2 != 0 },
+            0x11 => Instr::DwTile { h: get(4), w: get(8), c: get(12), stride: w[1] },
+            0x12 => Instr::AddTile { n: get(4) },
+            0x13 => Instr::ActTile { n: get(4), nlu: w[1] != 0 },
+            0x14 => Instr::PoolTile { h: get(4), w: get(8), c: get(12) },
+            0x20 => Instr::Sync,
+            0x21 => Instr::Halt,
+            op => anyhow::bail!("unknown opcode {op:#x}"),
+        })
+    }
+}
+
+fn space_code(s: Space) -> u8 {
+    match s {
+        Space::L2Bottom => 0,
+        Space::L2Middle => 1,
+        Space::Local => 2,
+    }
+}
+
+fn code_space(c: u8) -> crate::Result<Space> {
+    Ok(match c {
+        0 => Space::L2Bottom,
+        1 => Space::L2Middle,
+        2 => Space::Local,
+        _ => anyhow::bail!("unknown space code {c}"),
+    })
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Instr::DmpaLoad { src, src_addr, dst_addr, bytes } => {
+                write!(f, "dmpa.load  local:{dst_addr:#x} <- {src:?}:{src_addr:#x} [{bytes}B]")
+            }
+            Instr::DmpaStore { dst, dst_addr, src_addr, bytes } => {
+                write!(f, "dmpa.store {dst:?}:{dst_addr:#x} <- local:{src_addr:#x} [{bytes}B]")
+            }
+            Instr::DmaLoad { src, src_addr, dst_addr, bytes } => {
+                write!(f, "dma.load   local:{dst_addr:#x} <- {src:?}:{src_addr:#x} [{bytes}B]")
+            }
+            Instr::DmaStore { dst, dst_addr, src_addr, bytes } => {
+                write!(f, "dma.store  {dst:?}:{dst_addr:#x} <- local:{src_addr:#x} [{bytes}B]")
+            }
+            Instr::AiuLoop { reg, count, stride } => write!(f, "aiu.loop   r{reg} count={count} stride={stride}"),
+            Instr::RouteCfg { pattern } => write!(f, "route.cfg  pattern={pattern}"),
+            Instr::ConvTile { m, k, n, first, last } => {
+                write!(f, "conv.tile  {m}x{k}x{n}{}{}", if *first { " first" } else { "" }, if *last { " last" } else { "" })
+            }
+            Instr::DwTile { h, w, c, stride } => write!(f, "dw.tile    {h}x{w}x{c} s{stride}"),
+            Instr::AddTile { n } => write!(f, "add.tile   n={n}"),
+            Instr::ActTile { n, nlu } => write!(f, "act.tile   n={n}{}", if *nlu { " nlu" } else { "" }),
+            Instr::PoolTile { h, w, c } => write!(f, "pool.tile  {h}x{w}x{c}"),
+            Instr::Sync => write!(f, "sync"),
+            Instr::Halt => write!(f, "halt"),
+        }
+    }
+}
+
+/// A per-cluster program plus its metadata.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+}
+
+impl Program {
+    /// Encoded program size in bytes (the AIU footprint claim).
+    pub fn size_bytes(&self) -> usize {
+        self.instrs.len() * 16
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.instrs.iter().map(|i| i.macs()).sum()
+    }
+
+    /// Serialize to the 16-byte-word binary format.
+    pub fn assemble(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.size_bytes());
+        for i in &self.instrs {
+            out.extend_from_slice(&i.encode());
+        }
+        out
+    }
+
+    /// Parse back from binary.
+    pub fn disassemble(bytes: &[u8]) -> crate::Result<Program> {
+        anyhow::ensure!(bytes.len() % 16 == 0, "program not word-aligned");
+        let mut instrs = Vec::with_capacity(bytes.len() / 16);
+        for wdw in bytes.chunks_exact(16) {
+            instrs.push(Instr::decode(wdw.try_into().unwrap())?);
+        }
+        Ok(Program { instrs })
+    }
+
+    /// Human-readable listing.
+    pub fn listing(&self) -> String {
+        self.instrs.iter().enumerate().map(|(i, op)| format!("{i:5}: {op}\n")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_program() -> Program {
+        Program {
+            instrs: vec![
+                Instr::AiuLoop { reg: 0, count: 12, stride: 64 },
+                Instr::DmpaLoad { src: Space::L2Bottom, src_addr: 0x1000, dst_addr: 0, bytes: 4096 },
+                Instr::DmaLoad { src: Space::L2Middle, src_addr: 0x8000, dst_addr: 0x100, bytes: 64 },
+                Instr::ConvTile { m: 64, k: 64, n: 64, first: true, last: false },
+                Instr::ConvTile { m: 64, k: 64, n: 64, first: false, last: true },
+                Instr::DwTile { h: 16, w: 16, c: 8, stride: 2 },
+                Instr::AddTile { n: 1024 },
+                Instr::ActTile { n: 512, nlu: true },
+                Instr::PoolTile { h: 6, w: 8, c: 256 },
+                Instr::DmpaStore { dst: Space::L2Bottom, dst_addr: 0x2000, src_addr: 0, bytes: 2048 },
+                Instr::RouteCfg { pattern: 3 },
+                Instr::Sync,
+                Instr::Halt,
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_encode_decode() {
+        let p = sample_program();
+        let bin = p.assemble();
+        assert_eq!(bin.len(), p.size_bytes());
+        let q = Program::disassemble(&bin).unwrap();
+        assert_eq!(p.instrs, q.instrs);
+    }
+
+    #[test]
+    fn engines_are_classified() {
+        assert_eq!(Instr::Sync.engine(), Engine::Control);
+        assert_eq!(Instr::AddTile { n: 1 }.engine(), Engine::Compute);
+        assert_eq!(
+            Instr::DmaStore { dst: Space::L2Bottom, dst_addr: 0, src_addr: 0, bytes: 1 }.engine(),
+            Engine::Xfer
+        );
+    }
+
+    #[test]
+    fn mac_accounting() {
+        let p = sample_program();
+        assert_eq!(p.total_macs(), 2 * 64 * 64 * 64 + 9 * 16 * 16 * 8);
+    }
+
+    #[test]
+    fn tsv_crossing_detection() {
+        let i = Instr::DmaLoad { src: Space::L2Middle, src_addr: 0, dst_addr: 0, bytes: 8 };
+        assert!(i.crosses_tsv());
+        let i = Instr::DmpaLoad { src: Space::L2Bottom, src_addr: 0, dst_addr: 0, bytes: 8 };
+        assert!(!i.crosses_tsv());
+    }
+
+    #[test]
+    fn bad_opcode_rejected() {
+        let mut w = [0u8; 16];
+        w[0] = 0xFF;
+        assert!(Instr::decode(&w).is_err());
+    }
+
+    #[test]
+    fn listing_contains_mnemonics() {
+        let l = sample_program().listing();
+        assert!(l.contains("dmpa.load"));
+        assert!(l.contains("conv.tile"));
+        assert!(l.contains("halt"));
+    }
+}

@@ -1,0 +1,50 @@
+//! # j3dai — reproduction of the J3DAI 3D-stacked CMOS-image-sensor edge-AI system
+//!
+//! J3DAI (Tain et al., ISLPED 2025) is a 3-layer wafer-stacked image sensor
+//! whose bottom die carries a tiny programmable DNN accelerator: 6 neural
+//! clusters x 16 neural computing blocks x 8 PEs = 768 MAC/cycle at 200 MHz
+//! in 28 nm FDSOI, fed by 5 MB of L2 SRAM split across the middle/bottom
+//! dies through high-density TSVs, and programmed through the Aidge
+//! post-training-quantization + mapping/scheduling export flow.
+//!
+//! This crate rebuilds the *digital system* of that paper as a simulated
+//! substrate (we cannot tape out silicon — see DESIGN.md):
+//!
+//! - [`config`]   — architecture parameters (the paper's Table II knobs)
+//! - [`graph`]    — quantized NN graph IR with shape/MAC accounting
+//! - [`models`]   — MobileNetV1/V2 + FPN-segmentation builders (the paper's
+//!   three workloads, MMAC targets 557 / 289 / 877)
+//! - [`quant`]    — the INT8 post-training-quantization contract shared
+//!   bit-exactly with the JAX/Pallas golden models
+//! - [`isa`]      — the accelerator's macro-op instruction set + assembler
+//! - [`compiler`] — the Aidge-export analog: memory placement, tiling,
+//!   DMPA/DMA selection, load-masking scheduler, codegen
+//! - [`sim`]      — cycle-level + functional simulator of the DNN system
+//!   (PEs, NCB SRAM + local routers, clusters, AGU/AIU, DMPA/CCONNECT,
+//!   DMA, L2, host)
+//! - [`power`]    — activity-based energy model + die area/floorplan model
+//! - [`sensor`]   — pixel-matrix / readout / ISP front-end model
+//! - [`runtime`]  — PJRT client running the AOT JAX artifacts (functional
+//!   golden path; python is never on the request path)
+//! - [`coordinator`] — the frame-loop service tying sensor, simulator and
+//!   runtime together with an FPS governor and metrics
+//! - [`report`]   — renders the paper's tables/figures from measurements
+//! - [`ptest`]    — tiny in-repo property-test runner (offline registry has
+//!   no proptest crate)
+
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod isa;
+pub mod models;
+pub mod power;
+pub mod ptest;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sensor;
+pub mod sim;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

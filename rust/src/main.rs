@@ -1,0 +1,193 @@
+//! j3dai CLI — the leader entrypoint.
+//!
+//! ```text
+//! j3dai serve  [--model NAME] [--fps N] [--frames N]   run the frame loop
+//! j3dai sim    [--model mbv1|mbv2|seg|all]             cycle-simulate Table I workloads
+//! j3dai table1 | table2 | fig5 | fig6                  print a paper table/figure
+//! j3dai compile [--model ...]                          show mapping/schedule report
+//! j3dai list                                           list loaded artifacts
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline registry has no clap.)
+
+use j3dai::config::ArchConfig;
+use j3dai::coordinator::{Coordinator, CoordinatorConfig};
+use j3dai::power::{area, EnergyModel};
+use j3dai::{compiler, models, report, runtime, sim};
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn paper_graph(key: &str) -> Option<j3dai::graph::Graph> {
+    match key {
+        "mbv1" => Some(models::paper_mbv1()),
+        "mbv2" => Some(models::paper_mbv2()),
+        "seg" => Some(models::paper_seg()),
+        other => models::artifact_graph(other),
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> j3dai::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let cfg = ArchConfig::j3dai();
+    let em = EnergyModel::fdsoi28();
+
+    match cmd {
+        "serve" => {
+            let fps: f64 = flag(&args, "--fps").and_then(|v| v.parse().ok()).unwrap_or(30.0);
+            let frames: u64 = flag(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(30);
+            let model = flag(&args, "--model").unwrap_or_else(|| "tinycnn_24x32".into());
+            let coord = Coordinator::new(
+                &runtime::default_artifact_dir(),
+                CoordinatorConfig { target_fps: fps, frames, arch: cfg },
+            )?;
+            let stats = coord.run_model(&model)?;
+            println!(
+                "{}: {} frames in {:.2}s — achieved {:.1} FPS (target {:.0})",
+                stats.model, stats.frames, stats.wall_s, stats.achieved_fps, fps
+            );
+            println!(
+                "PJRT service: mean {:.0} us, p99 {:.0} us | modeled accel: {:.2} ms/inf, {:.1} mW @ {:.0} FPS",
+                stats.mean_service_us, stats.p99_service_us, stats.modeled_latency_ms, stats.modeled_power_mw_at_fps, fps
+            );
+        }
+        "sim" => {
+            let which = flag(&args, "--model").unwrap_or_else(|| "all".into());
+            let keys: Vec<&str> =
+                if which == "all" { vec!["mbv1", "mbv2", "seg"] } else { vec![which.as_str()] };
+            for key in keys {
+                let g = paper_graph(key).ok_or_else(|| anyhow::anyhow!("unknown model {key}"))?;
+                let r = sim::simulate(&g, &cfg)?;
+                println!(
+                    "{:<14} {:>6.0} MMACs  {:>8} cycles  {:.2} ms  eff {:.1}%  P@30 {}",
+                    r.model,
+                    r.total_macs as f64 / 1e6,
+                    r.cycles,
+                    r.latency_ms,
+                    r.mac_efficiency * 100.0,
+                    r.power_mw(&em, 30.0).map(|p| format!("{p:.1} mW")).unwrap_or("-".into())
+                );
+                if flag(&args, "--activity").is_some() || args.iter().any(|a| a == "--activity") {
+                    let a = &r.activity;
+                    println!(
+                        "    macs={} sram={} dmpa={} dma={} tsv={} alu={} busy={} E={:.3} mJ",
+                        a.macs, a.local_sram_bytes, a.dmpa_bytes, a.dma_bytes, a.tsv_bytes, a.alu_ops,
+                        a.busy_cluster_cycles, em.inference_mj(a)
+                    );
+                }
+            }
+        }
+        "table1" => {
+            let rows = [
+                (models::paper_mbv1(), "256x192"),
+                (models::paper_mbv2(), "256x192"),
+                (models::paper_seg(), "512x384"),
+            ]
+            .into_iter()
+            .map(|(g, input)| sim::simulate(&g, &cfg).map(|r| report::table1_row(&r, &em, input)))
+            .collect::<j3dai::Result<Vec<_>>>()?;
+            print!("{}", report::render_table1(&rows));
+        }
+        "table2" => {
+            let mbv2 = sim::simulate(&models::paper_mbv2(), &cfg)?;
+            let mut cols = report::sony_columns();
+            cols.push(report::j3dai_column(&cfg, &mbv2, &em));
+            print!("{}", report::render_table2(&cols));
+        }
+        "fig5" => {
+            print!("{}", report::render_floorplan(&area::middle_die(&cfg)));
+            print!("{}", report::render_floorplan(&area::bottom_die(&cfg)));
+        }
+        "fig6" => print!("{}", report::render_fig6()),
+        "compile" => {
+            let key = flag(&args, "--model").unwrap_or_else(|| "mbv1".into());
+            let g = paper_graph(&key).ok_or_else(|| anyhow::anyhow!("unknown model {key}"))?;
+            let c = compiler::compile(&g, &cfg)?;
+            println!("model {}: {} layers, {:.0} MMACs", c.model, g.layers.len(), g.total_macs() as f64 / 1e6);
+            println!(
+                "programs: {} clusters, {} bytes total; params {:.2} MB in L2, peak act {:.2} MB",
+                c.cluster_programs.len(),
+                c.program_bytes(),
+                c.param_bytes as f64 / 1e6,
+                c.peak_activation_bytes as f64 / 1e6
+            );
+            for m in c.layer_maps.iter().take(8) {
+                println!(
+                    "  {:<26} gemm {}x{}x{} tile {}x{}x{} util {:.0}% ws {} B",
+                    m.name, m.m, m.k, m.n, m.bm, m.bk, m.bn, m.pe_utilization * 100.0, m.working_set_bytes
+                );
+            }
+            if c.layer_maps.len() > 8 {
+                println!("  ... {} more layers", c.layer_maps.len() - 8);
+            }
+        }
+        "check-artifacts" => {
+            // self-check: run every artifact on its recorded input and
+            // compare against the recorded golden bytes
+            let dir = flag(&args, "--dir").map(std::path::PathBuf::from).unwrap_or_else(runtime::default_artifact_dir);
+            let mut rt = runtime::Runtime::new()?;
+            rt.load_all(&dir)?;
+            let mut bad = 0;
+            for e in runtime::load_manifest(&dir)? {
+                let input = std::fs::read(&e.input_path)?;
+                let frame = j3dai::sim::functional::Tensor::new(e.input_shape, input);
+                let out = rt.infer(&e.name, &frame)?;
+                let golden = std::fs::read(&e.golden_path)?;
+                let ok = out == golden;
+                if !ok { bad += 1; }
+                if args.iter().any(|a| a == "--dump") {
+                    std::fs::write(dir.join(format!("{}.pjrt.bin", e.name)), &out)?;
+                }
+                let diff = out.iter().zip(&golden).filter(|(a, b)| a != b).count();
+                println!("{:<24} {} ({} / {} bytes differ)", e.name, if ok { "OK" } else { "MISMATCH" }, diff, golden.len());
+            }
+            anyhow::ensure!(bad == 0, "{bad} artifacts mismatch");
+        }
+        "tiles" => return print_tile_counts(),
+        "list" => {
+            let entries = runtime::load_manifest(&runtime::default_artifact_dir())?;
+            for e in entries {
+                println!("{:<20} input {} -> output {:?}", e.name, e.input_shape, e.output_dims);
+            }
+        }
+        _ => {
+            println!("j3dai — J3DAI (ISLPED'25) digital-system reproduction");
+            println!("commands: serve | sim | table1 | table2 | fig5 | fig6 | compile | list");
+        }
+    }
+    Ok(())
+}
+
+// (dev helper kept out of the help text: `j3dai tiles` prints per-model
+// compute-tile and layer counts — used to fit the calibration constants,
+// see EXPERIMENTS.md §Calibration.)
+pub fn print_tile_counts() -> j3dai::Result<()> {
+    let cfg = ArchConfig::j3dai();
+    for key in ["mbv1", "mbv2", "seg"] {
+        let g = paper_graph(key).unwrap();
+        let c = compiler::compile(&g, &cfg)?;
+        let tiles: usize = c
+            .cluster_programs
+            .iter()
+            .flat_map(|p| &p.instrs)
+            .filter(|i| matches!(i, j3dai::isa::Instr::ConvTile { .. } | j3dai::isa::Instr::DwTile { .. }))
+            .count();
+        let elem: usize = c
+            .cluster_programs
+            .iter()
+            .flat_map(|p| &p.instrs)
+            .filter(|i| matches!(i, j3dai::isa::Instr::AddTile { .. } | j3dai::isa::Instr::PoolTile { .. }))
+            .count();
+        println!("{key}: layers={} tiles={tiles} elem_tiles={elem}", g.layers.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,247 @@
+//! Model zoo — the paper's three workloads plus the tiny smoke-test net.
+//!
+//! Topology and naming mirror `python/compile/model.py` exactly (the layer
+//! names seed the weight streams, so any divergence breaks the functional
+//! cross-check). At full scale (alpha = 1, 256x192 / alpha = 1/2, 512x384)
+//! the MAC counts must land on the paper's Table I values: 557 / 289 / 877
+//! MMACs.
+
+use crate::graph::{ch, Graph, Op, Shape, INPUT};
+
+/// MobileNetV1 pointwise output channels per block (alpha = 1).
+pub const MBV1_CH: [usize; 13] = [64, 128, 128, 256, 256, 512, 512, 512, 512, 512, 512, 1024, 1024];
+/// MobileNetV1 depthwise strides per block.
+pub const MBV1_STRIDE: [usize; 13] = [1, 2, 1, 2, 1, 2, 1, 1, 1, 1, 1, 2, 1];
+
+/// MobileNetV2 inverted-residual config: (expansion, channels, repeats, stride).
+pub const MBV2_CFG: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+/// FPN pyramid width at alpha = 1 (scaled like every other channel count).
+/// 128 lands the alpha=0.5 512x384 network on the paper's 877 MMACs.
+pub const FPN_CH: usize = 128;
+
+fn conv(cout: usize, k: usize, stride: usize) -> Op {
+    Op::Conv { kh: k, kw: k, cout, stride, relu: true }
+}
+
+fn conv_linear(cout: usize, k: usize) -> Op {
+    Op::Conv { kh: k, kw: k, cout, stride: 1, relu: false }
+}
+
+/// MobileNetV1. `taps` = 1-based block indices whose pointwise output is
+/// recorded (FPN backbone); returns (graph, tap layer indices).
+pub fn mobilenet_v1_tapped(
+    num: usize,
+    den: usize,
+    input: Shape,
+    classes: usize,
+    taps: &[usize],
+) -> (Graph, Vec<usize>) {
+    let p = format!("mbv1_{num}_{den}");
+    let mut g = Graph::new(p.clone(), input);
+    let mut x = g.push(format!("{p}/conv0"), conv(ch(32, num, den), 3, 2), vec![INPUT]);
+    let mut tapped = Vec::new();
+    for (i, (&c, &s)) in MBV1_CH.iter().zip(MBV1_STRIDE.iter()).enumerate() {
+        let i = i + 1;
+        x = g.push(format!("{p}/dw{i}"), Op::DwConv { stride: s }, vec![x]);
+        x = g.push(format!("{p}/pw{i}"), conv(ch(c, num, den), 1, 1), vec![x]);
+        if taps.contains(&i) {
+            tapped.push(x);
+        }
+    }
+    if taps.is_empty() {
+        let ap = g.push(format!("{p}/avgpool"), Op::GlobalAvgPool, vec![x]);
+        g.push(format!("{p}/fc"), Op::Dense { out: classes }, vec![ap]);
+    }
+    (g, tapped)
+}
+
+/// MobileNetV1 classifier.
+pub fn mobilenet_v1(num: usize, den: usize, input: Shape, classes: usize) -> Graph {
+    mobilenet_v1_tapped(num, den, input, classes, &[]).0
+}
+
+/// MobileNetV2 classifier.
+pub fn mobilenet_v2(num: usize, den: usize, input: Shape, classes: usize) -> Graph {
+    let p = format!("mbv2_{num}_{den}");
+    let mut g = Graph::new(p.clone(), input);
+    let mut x = g.push(format!("{p}/conv0"), conv(ch(32, num, den), 3, 2), vec![INPUT]);
+    let mut cin = ch(32, num, den);
+    let mut bi = 0;
+    for (t, c, n, s) in MBV2_CFG {
+        let cout = ch(c, num, den);
+        for r in 0..n {
+            bi += 1;
+            let stride = if r == 0 { s } else { 1 };
+            let inp = x;
+            if t != 1 {
+                x = g.push(format!("{p}/b{bi}/exp"), conv(cin * t, 1, 1), vec![x]);
+            }
+            x = g.push(format!("{p}/b{bi}/dw"), Op::DwConv { stride }, vec![x]);
+            x = g.push(format!("{p}/b{bi}/proj"), conv_linear(cout, 1), vec![x]);
+            if stride == 1 && cin == cout {
+                x = g.push(format!("{p}/b{bi}/add"), Op::Add, vec![inp, x]);
+            }
+            cin = cout;
+        }
+    }
+    x = g.push(format!("{p}/convlast"), conv(ch(1280, num, den), 1, 1), vec![x]);
+    let ap = g.push(format!("{p}/avgpool"), Op::GlobalAvgPool, vec![x]);
+    g.push(format!("{p}/fc"), Op::Dense { out: classes }, vec![ap]);
+    g
+}
+
+/// FPN segmentation network over a MobileNetV1 backbone (paper: alpha=0.5,
+/// 512x384 input, Cityscapes 19 classes, 877 MMACs). Taps: C3 = pw5
+/// (stride 8), C4 = pw11 (stride 16), C5 = pw13 (stride 32).
+pub fn fpn_seg(num: usize, den: usize, input: Shape, classes: usize) -> Graph {
+    let (mut g, taps) = mobilenet_v1_tapped(num, den, input, 0, &[5, 11, 13]);
+    let (c3, c4, c5) = (taps[0], taps[1], taps[2]);
+    let p = format!("fpnseg_{num}_{den}");
+    g.name = p.clone();
+    let pc = ch(FPN_CH, num, den);
+    let l5 = g.push(format!("{p}/fpn/lat5"), conv(pc, 1, 1), vec![c5]);
+    let l4 = g.push(format!("{p}/fpn/lat4"), conv(pc, 1, 1), vec![c4]);
+    let l3 = g.push(format!("{p}/fpn/lat3"), conv(pc, 1, 1), vec![c3]);
+    let s4 = g.layers[l4].out_shape;
+    let u5 = g.push(format!("{p}/fpn/up5"), Op::Upsample2x { to_h: s4.h, to_w: s4.w }, vec![l5]);
+    let p4 = g.push(format!("{p}/fpn/add4"), Op::Add, vec![l4, u5]);
+    let s3 = g.layers[l3].out_shape;
+    let u4 = g.push(format!("{p}/fpn/up4"), Op::Upsample2x { to_h: s3.h, to_w: s3.w }, vec![p4]);
+    let p3 = g.push(format!("{p}/fpn/add3"), Op::Add, vec![l3, u4]);
+    let h1 = g.push(format!("{p}/fpn/head"), conv(pc, 3, 1), vec![p3]);
+    let h2 = g.push(format!("{p}/fpn/head2"), conv(pc, 3, 1), vec![h1]);
+    g.push(format!("{p}/fpn/cls"), conv_linear(classes, 1), vec![h2]);
+    g
+}
+
+/// Tiny CNN (quickstart artifact).
+pub fn tinycnn(input: Shape, classes: usize) -> Graph {
+    let mut g = Graph::new("tinycnn", input);
+    let c = g.push("tinycnn/conv0", conv(8, 3, 2), vec![INPUT]);
+    let d = g.push("tinycnn/dw1", Op::DwConv { stride: 1 }, vec![c]);
+    let p = g.push("tinycnn/pw1", conv(16, 1, 1), vec![d]);
+    let a = g.push("tinycnn/avgpool", Op::GlobalAvgPool, vec![p]);
+    g.push("tinycnn/fc", Op::Dense { out: classes }, vec![a]);
+    g
+}
+
+/// The paper's Table I workloads at full scale.
+pub fn paper_mbv1() -> Graph {
+    mobilenet_v1(1, 1, Shape::new(192, 256, 3), 1000)
+}
+
+pub fn paper_mbv2() -> Graph {
+    mobilenet_v2(1, 1, Shape::new(192, 256, 3), 1000)
+}
+
+pub fn paper_seg() -> Graph {
+    fpn_seg(1, 2, Shape::new(384, 512, 3), 19)
+}
+
+/// Reduced-scale builders matching the AOT artifact registry
+/// (`python/compile/model.py::MODELS`).
+pub fn artifact_graph(name: &str) -> Option<Graph> {
+    match name {
+        "tinycnn_24x32" => Some(tinycnn(Shape::new(24, 32, 3), 10)),
+        "mbv1_w25_48x64" => Some(mobilenet_v1(1, 4, Shape::new(48, 64, 3), 100)),
+        "mbv2_w25_48x64" => Some(mobilenet_v2(1, 4, Shape::new(48, 64, 3), 100)),
+        "fpnseg_w25_48x64" => Some(fpn_seg(1, 4, Shape::new(48, 64, 3), 19)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mbv1_mac_count() {
+        // Table I: 557 MMACs at 256x192 (vs 569 at 224x224).
+        let g = paper_mbv1();
+        let mm = g.total_macs() as f64 / 1e6;
+        assert!((mm - 557.0).abs() < 15.0, "MBv1 MMACs = {mm}");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_mbv2_mac_count() {
+        // Table I: 289 MMACs at 256x192 (vs 300 at 224x224).
+        let g = paper_mbv2();
+        let mm = g.total_macs() as f64 / 1e6;
+        assert!((mm - 289.0).abs() < 15.0, "MBv2 MMACs = {mm}");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_seg_mac_count() {
+        // Table I: 877 MMACs at 512x384, alpha = 0.5 backbone.
+        let g = paper_seg();
+        let mm = g.total_macs() as f64 / 1e6;
+        assert!((mm - 877.0).abs() < 45.0, "Seg MMACs = {mm}");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn standard_mbv1_224_is_569m() {
+        let g = mobilenet_v1(1, 1, Shape::new(224, 224, 3), 1000);
+        let mm = g.total_macs() as f64 / 1e6;
+        assert!((mm - 569.0).abs() < 15.0, "MBv1@224 MMACs = {mm}");
+    }
+
+    #[test]
+    fn artifact_graphs_build_and_validate() {
+        for name in ["tinycnn_24x32", "mbv1_w25_48x64", "mbv2_w25_48x64", "fpnseg_w25_48x64"] {
+            let g = artifact_graph(name).unwrap();
+            g.validate().unwrap();
+            assert!(g.total_macs() > 0);
+        }
+        assert!(artifact_graph("nope").is_none());
+    }
+
+    #[test]
+    fn mbv1_topology() {
+        let g = paper_mbv1();
+        // conv0 + 13*(dw+pw) + avgpool + fc
+        assert_eq!(g.layers.len(), 1 + 26 + 2);
+        assert_eq!(g.output(), Shape::new(1, 1, 1000));
+        // strides reduce 256x192 by 32
+        assert_eq!(g.layers[25].out_shape.h, 192 / 32);
+    }
+
+    #[test]
+    fn mbv2_residual_count_matches_python() {
+        // Twin of python test_mbv2_residual_condition (alpha = 1/4 -> 11).
+        let g = mobilenet_v2(1, 4, Shape::new(48, 64, 3), 100);
+        let adds = g.layers.iter().filter(|l| matches!(l.op, Op::Add)).count();
+        assert_eq!(adds, 11);
+        // alpha = 1 -> the canonical 10 residuals.
+        let g = paper_mbv2();
+        let adds = g.layers.iter().filter(|l| matches!(l.op, Op::Add)).count();
+        assert_eq!(adds, 10);
+    }
+
+    #[test]
+    fn fpn_output_is_stride8_classmap() {
+        let g = paper_seg();
+        assert_eq!(g.output(), Shape::new(384 / 8, 512 / 8, 19));
+    }
+
+    #[test]
+    fn param_budget_fits_l2() {
+        // The paper sized 5 MB L2 so "several networks that require multiple
+        // MBs to store parameters" fit; MBv1 alpha=1 int8 is ~4.2 MB.
+        let c = crate::config::ArchConfig::j3dai();
+        assert!(paper_mbv1().total_param_bytes() < c.l2_bytes() as u64);
+        assert!(paper_mbv2().total_param_bytes() < c.l2_bytes() as u64);
+        assert!(paper_seg().total_param_bytes() < c.l2_bytes() as u64);
+    }
+}

@@ -1,0 +1,214 @@
+//! Activity-based energy model + die area model (28 nm FDSOI @ 0.85 V).
+//!
+//! We cannot run PrimePower on a post-P&R netlist here; instead the paper's
+//! power numbers are reproduced by an event-energy model whose coefficients
+//! were calibrated once against Table I (see EXPERIMENTS.md §Power):
+//!
+//! - Table I's @30 FPS vs @200 FPS rows pin the static power:
+//!   P(fps) = E_inf * fps + P_static, giving E_inf(MBv1) ~= 1.43 mJ,
+//!   E_inf(MBv2) ~= 0.92 mJ, P_static ~= 3-5 mW.
+//! - E_inf decomposes into MAC energy + SRAM/L2/DMPA/DMA transport + TSV
+//!   crossings + per-cycle controller overhead; the simulator supplies the
+//!   event counts ([`Activity`]), this module supplies the joules.
+//!
+//! The *shape* claims that must hold: MBv2 costs more energy per MAC than
+//! MBv1 (more data movement per MAC), the segmentation net sits in
+//! between, and the J3DAI point wins GOPS/W/mm^2 in Table II.
+
+pub mod area;
+
+use crate::config::ArchConfig;
+
+/// Event counts produced by one simulated inference.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Activity {
+    /// Total MAC operations executed.
+    pub macs: u64,
+    /// Total cycles of the inference (critical path).
+    pub cycles: u64,
+    /// Bytes read/written in NCB-local SRAM (operand + result traffic).
+    pub local_sram_bytes: u64,
+    /// Bytes moved by the DMPA between L2 and clusters.
+    pub dmpa_bytes: u64,
+    /// Bytes moved by the 64-bit DMA.
+    pub dma_bytes: u64,
+    /// Bytes that crossed the middle-die TSVs.
+    pub tsv_bytes: u64,
+    /// Elementwise ALU/NLU operations (adds, activations, pool taps).
+    pub alu_ops: u64,
+    /// Cluster-cycles spent busy (for clock-gating modeling).
+    pub busy_cluster_cycles: u64,
+}
+
+impl Activity {
+    pub fn merge(&mut self, o: &Activity) {
+        self.macs += o.macs;
+        self.cycles = self.cycles.max(o.cycles);
+        self.local_sram_bytes += o.local_sram_bytes;
+        self.dmpa_bytes += o.dmpa_bytes;
+        self.dma_bytes += o.dma_bytes;
+        self.tsv_bytes += o.tsv_bytes;
+        self.alu_ops += o.alu_ops;
+        self.busy_cluster_cycles += o.busy_cluster_cycles;
+    }
+}
+
+/// Energy coefficients (picojoules per event), 28 nm FDSOI @ 0.85 V.
+///
+/// Calibrated so the three Table I workloads land on the paper's measured
+/// power within a few percent (EXPERIMENTS.md §Power shows the fit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    /// One 9-bit x 8-bit MAC incl. pipeline registers.
+    pub pj_per_mac: f64,
+    /// One byte read or written in an NCB SRAM bank.
+    pub pj_per_sram_byte: f64,
+    /// One byte through the DMPA column connect (incl. L2 access).
+    pub pj_per_dmpa_byte: f64,
+    /// One byte over the system interconnect DMA (incl. L2 access).
+    pub pj_per_dma_byte: f64,
+    /// One byte across the HD-TSV array (adder on top of the L2 access).
+    pub pj_per_tsv_byte: f64,
+    /// One elementwise ALU/NLU op.
+    pub pj_per_alu_op: f64,
+    /// Controller + AGU/AIU + clock distribution per busy cluster-cycle.
+    pub pj_per_busy_cluster_cycle: f64,
+    /// Static (leakage + always-on clock) power in mW.
+    pub static_mw: f64,
+}
+
+impl EnergyModel {
+    /// The calibrated 28 nm FDSOI / 0.85 V point. Fit against Table I's
+    /// six power cells (three models x two frame rates) with the TSV/SRAM/
+    /// DMPA transport costs pinned to plausible 28 nm values; residual
+    /// error < 7% on every cell (EXPERIMENTS.md §Power).
+    pub fn fdsoi28() -> Self {
+        EnergyModel {
+            pj_per_mac: 1.652,
+            pj_per_sram_byte: 0.7,
+            pj_per_dmpa_byte: 2.0,
+            pj_per_dma_byte: 3.2,
+            pj_per_tsv_byte: 0.6,
+            pj_per_alu_op: 0.6,
+            pj_per_busy_cluster_cycle: 76.4,
+            static_mw: 3.8,
+        }
+    }
+
+    /// Voltage-scaled variant (dynamic energy ~ V^2, leakage ~ V).
+    pub fn at_voltage(&self, v: f64, vref: f64) -> Self {
+        let s = (v / vref).powi(2);
+        EnergyModel {
+            pj_per_mac: self.pj_per_mac * s,
+            pj_per_sram_byte: self.pj_per_sram_byte * s,
+            pj_per_dmpa_byte: self.pj_per_dmpa_byte * s,
+            pj_per_dma_byte: self.pj_per_dma_byte * s,
+            pj_per_tsv_byte: self.pj_per_tsv_byte * s,
+            pj_per_alu_op: self.pj_per_alu_op * s,
+            pj_per_busy_cluster_cycle: self.pj_per_busy_cluster_cycle * s,
+            static_mw: self.static_mw * (v / vref),
+        }
+    }
+
+    /// Energy of one inference in millijoules.
+    pub fn inference_mj(&self, a: &Activity) -> f64 {
+        let pj = self.pj_per_mac * a.macs as f64
+            + self.pj_per_sram_byte * a.local_sram_bytes as f64
+            + self.pj_per_dmpa_byte * a.dmpa_bytes as f64
+            + self.pj_per_dma_byte * a.dma_bytes as f64
+            + self.pj_per_tsv_byte * a.tsv_bytes as f64
+            + self.pj_per_alu_op * a.alu_ops as f64
+            + self.pj_per_busy_cluster_cycle * a.busy_cluster_cycles as f64;
+        pj * 1e-9
+    }
+
+    /// Average power in mW at a given frame rate.
+    pub fn power_mw(&self, a: &Activity, fps: f64) -> f64 {
+        self.inference_mj(a) * fps + self.static_mw
+    }
+
+    /// TOPS/W at a frame rate (1 MAC = 2 ops), the Table I metric.
+    pub fn tops_per_watt(&self, a: &Activity, fps: f64) -> f64 {
+        let ops_per_s = a.macs as f64 * 2.0 * fps;
+        let watts = self.power_mw(a, fps) * 1e-3;
+        ops_per_s / watts / 1e12
+    }
+}
+
+/// Latency of one inference in milliseconds at the configured clock.
+pub fn latency_ms(cfg: &ArchConfig, cycles: u64) -> f64 {
+    cycles as f64 / (cfg.freq_mhz * 1e3)
+}
+
+/// MAC/cycle efficiency — Table I/II's "MAC processing efficiency".
+pub fn mac_efficiency(cfg: &ArchConfig, a: &Activity) -> f64 {
+    a.macs as f64 / (a.cycles as f64 * cfg.macs_per_cycle() as f64)
+}
+
+/// Maximum sustainable FPS given the inference latency.
+pub fn max_fps(cfg: &ArchConfig, cycles: u64) -> f64 {
+    1e3 / latency_ms(cfg, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mbv1_like() -> Activity {
+        // Roughly the event profile the simulator produces for MBv1@256x192.
+        Activity {
+            macs: 557_000_000,
+            cycles: 992_000,
+            local_sram_bytes: 180_000_000,
+            dmpa_bytes: 9_000_000,
+            dma_bytes: 300_000,
+            tsv_bytes: 3_000_000,
+            alu_ops: 3_000_000,
+            busy_cluster_cycles: 5_500_000,
+        }
+    }
+
+    #[test]
+    fn power_scales_linearly_with_fps() {
+        let em = EnergyModel::fdsoi28();
+        let a = mbv1_like();
+        let p30 = em.power_mw(&a, 30.0);
+        let p200 = em.power_mw(&a, 200.0);
+        let slope = (p200 - p30) / 170.0;
+        let intercept = p30 - 30.0 * slope;
+        assert!((intercept - em.static_mw).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_metric_matches_paper_definition() {
+        let cfg = ArchConfig::j3dai();
+        let a = mbv1_like();
+        // 557e6 / (992000 * 768) = 73.1%
+        let eff = mac_efficiency(&cfg, &a);
+        assert!((eff - 0.731).abs() < 0.005, "eff={eff}");
+    }
+
+    #[test]
+    fn voltage_scaling_is_quadratic() {
+        let em = EnergyModel::fdsoi28();
+        let low = em.at_voltage(0.6, 0.85);
+        assert!((low.pj_per_mac / em.pj_per_mac - (0.6f64 / 0.85).powi(2)).abs() < 1e-12);
+        assert!(low.static_mw < em.static_mw);
+    }
+
+    #[test]
+    fn latency_and_fps() {
+        let cfg = ArchConfig::j3dai();
+        assert!((latency_ms(&cfg, 992_000) - 4.96).abs() < 1e-9);
+        assert!((max_fps(&cfg, 992_000) - 201.6).abs() < 0.1);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = mbv1_like();
+        let b = mbv1_like();
+        a.merge(&b);
+        assert_eq!(a.macs, 2 * 557_000_000);
+        assert_eq!(a.cycles, 992_000); // max, not sum
+    }
+}

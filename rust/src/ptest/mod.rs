@@ -1,0 +1,104 @@
+//! Tiny in-repo property-test runner (the offline registry has no proptest
+//! crate). Seeded xorshift-based case generation, fixed case count, and a
+//! failure report that prints the seed so cases replay deterministically.
+
+/// Deterministic PRNG for property inputs (xorshift64*).
+#[derive(Debug, Clone)]
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { state: seed.max(1) }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [lo, hi] (inclusive).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.u64() % (hi - lo + 1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        (self.range(0, (hi - lo) as u64) as i64 + lo as i64) as i32
+    }
+
+    pub fn u8(&mut self) -> u8 {
+        (self.u64() >> 56) as u8
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `cases` property checks; panics with the failing seed on error.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u32, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x9E37_79B9_7F4A_7C15u64 ^ (case as u64).wrapping_mul(0xD134_2543_DE82_EF95);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            panic!("property `{name}` failed on case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn range_is_inclusive_and_bounded() {
+        let mut g = Gen::new(3);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..2000 {
+            let v = g.range(2, 5);
+            assert!((2..=5).contains(&v));
+            saw_lo |= v == 2;
+            saw_hi |= v == 5;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counter", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `boom` failed")]
+    fn check_reports_seed() {
+        check("boom", 5, |g| assert!(g.u64() % 2 == 0 || g.u64() % 2 == 1, "never"));
+        check("boom", 5, |_| panic!("kaboom"));
+    }
+}

@@ -1,0 +1,215 @@
+//! Post-training quantization contract — the Rust twin of
+//! `python/compile/quantize.py`.
+//!
+//! The paper deploys FP32-trained models through Aidge's post-training
+//! quantization to uint8 activations / int8 weights with fixed-point
+//! requantization. This module holds the arithmetic that the functional
+//! simulator, the compiler's codegen and the JAX golden models all share.
+//!
+//! Activations: uint8 affine (zero point 128 in the synthetic stack) — the
+//! zero-point-subtracted operand is a 9-bit signed value, exactly the J3DAI
+//! PE multiplier width. Weights: int8 symmetric. Accumulation: int32 (the
+//! PE's 32-bit accumulator). Requantization:
+//!
+//! ```text
+//! y = clamp(((acc * M + (1 << (shift-1))) >> shift) + zp_out, lo, hi)
+//! ```
+//!
+//! with the product in int64 and `>>` arithmetic — identical in both
+//! languages, so no rounding-mode mismatch is possible.
+
+pub mod ptq;
+pub mod weights;
+
+/// Fixed post-scaling shift used across the stack.
+pub const SHIFT: u32 = 24;
+/// Global synthetic activation zero point.
+pub const ZP: i32 = 128;
+
+/// Requantization parameters for one layer output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Requant {
+    /// int32 fixed-point multiplier.
+    pub mult: i32,
+    /// Right shift applied after the multiply.
+    pub shift: u32,
+    /// Output zero point.
+    pub zp_out: i32,
+    /// Post-activation clamp low (uint8 domain). ReLU == `zp_out`.
+    pub act_min: i32,
+    /// Post-activation clamp high. ReLU6 == q(6.0) == 224 here.
+    pub act_max: i32,
+}
+
+impl Requant {
+    /// Apply the contract to one int32 accumulator value. The whole chain
+    /// stays in i64 (like the numpy oracle), so even out-of-contract
+    /// (mult, shift) pairs clamp monotonically instead of wrapping.
+    #[inline(always)]
+    pub fn apply(&self, acc: i32) -> u8 {
+        let prod = acc as i64 * self.mult as i64 + (1i64 << (self.shift - 1));
+        let y = (prod >> self.shift) + self.zp_out as i64;
+        y.clamp(self.act_min as i64, self.act_max as i64) as u8
+    }
+}
+
+/// Deterministic requant parameters for a synthetic layer of reduction
+/// depth `k` — must match `quantize.requant_for_reduction` bit-for-bit
+/// (same f64 expression, same rounding).
+pub fn requant_for_reduction(k: usize, relu: bool, relu6: bool) -> Requant {
+    let k = k.max(1) as f64;
+    let scale = 1.0 / (k.sqrt() * 48.0);
+    let mult = ((scale * (1u64 << SHIFT) as f64).round() as i64).max(1) as i32;
+    let zp = ZP;
+    Requant {
+        mult,
+        shift: SHIFT,
+        zp_out: zp,
+        act_min: if relu { zp } else { 0 },
+        act_max: if relu6 { 224 } else { 255 },
+    }
+}
+
+/// Parameters of the quantized residual add:
+/// `y = clamp((((a-zpa)*ma + (b-zpb)*mb + rnd) >> shift) + zpo, lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QAdd {
+    pub zp_a: i32,
+    pub zp_b: i32,
+    pub mult_a: i32,
+    pub mult_b: i32,
+    pub shift: u32,
+    pub zp_out: i32,
+    pub act_min: i32,
+    pub act_max: i32,
+}
+
+impl QAdd {
+    /// The synthetic-stack default: average the two branches.
+    pub fn default_params() -> Self {
+        let half = 1i32 << (SHIFT - 1);
+        QAdd { zp_a: ZP, zp_b: ZP, mult_a: half, mult_b: half, shift: SHIFT, zp_out: ZP, act_min: 0, act_max: 255 }
+    }
+
+    #[inline(always)]
+    pub fn apply(&self, a: u8, b: u8) -> u8 {
+        let av = (a as i32 - self.zp_a) as i64;
+        let bv = (b as i32 - self.zp_b) as i64;
+        let sum = av * self.mult_a as i64 + bv * self.mult_b as i64 + (1i64 << (self.shift - 1));
+        let y = (sum >> self.shift) as i32 + self.zp_out;
+        y.clamp(self.act_min, self.act_max) as u8
+    }
+}
+
+/// Post-training calibration over a representative activation sample —
+/// the Aidge "calibrating the model using a representative dataset" step.
+/// Returns the affine (scale, zero_point) for a uint8 target using min/max
+/// observation with optional percentile clipping.
+pub fn calibrate_minmax(samples: &[f32], percentile: f64) -> (f32, i32) {
+    assert!(!samples.is_empty(), "empty calibration sample");
+    let mut v: Vec<f32> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo_idx = (((1.0 - percentile) / 2.0) * (v.len() - 1) as f64).round() as usize;
+    let hi_idx = ((1.0 - (1.0 - percentile) / 2.0) * (v.len() - 1) as f64).round() as usize;
+    let (lo, hi) = (v[lo_idx].min(0.0), v[hi_idx].max(0.0));
+    let scale = ((hi - lo) / 255.0).max(f32::MIN_POSITIVE);
+    let zp = (-lo / scale).round() as i32;
+    (scale, zp.clamp(0, 255))
+}
+
+/// Fold a float rescale factor into the fixed-point (mult, shift) pair the
+/// hardware requant path executes — the Aidge export's final step.
+pub fn quantize_multiplier(real: f64) -> (i32, u32) {
+    assert!(real > 0.0 && real < 1.0, "requant multiplier must be in (0,1): {real}");
+    let mut shift = 0u32;
+    let mut r = real;
+    // normalize into [0.5, 1.0) like gemmlowp, then fix the shift at >= 24
+    while r < 0.5 {
+        r *= 2.0;
+        shift += 1;
+    }
+    let q = (r * (1u64 << 31) as f64).round() as i64;
+    let (q, shift) = if q == (1i64 << 31) { (q / 2, shift.saturating_sub(1)) } else { (q, shift) };
+    (q as i32, shift + 31)
+}
+
+/// Apply a (mult, shift) pair from [`quantize_multiplier`] to an i32 value.
+pub fn apply_multiplier(acc: i32, mult: i32, shift: u32) -> i32 {
+    let prod = acc as i64 * mult as i64 + (1i64 << (shift - 1));
+    (prod >> shift) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requant_matches_python_semantics() {
+        // Hand-checked vectors of the shared formula.
+        let rq = Requant { mult: 1 << 23, shift: 24, zp_out: 128, act_min: 0, act_max: 255 };
+        assert_eq!(rq.apply(0), 128);
+        assert_eq!(rq.apply(2), 129); // 2*2^23 + 2^23 >> 24 = 1.25 -> 1
+        assert_eq!(rq.apply(-2), 127);
+        assert_eq!(rq.apply(1), 129); // 0.5 + 0.5 -> rounds toward +inf
+        assert_eq!(rq.apply(-1), 128); // -0.5 + 0.5 -> 0
+        assert_eq!(rq.apply(i32::MAX / 2), 255);
+        assert_eq!(rq.apply(i32::MIN / 2), 0);
+    }
+
+    #[test]
+    fn requant_for_reduction_known_values() {
+        // k=9 -> scale=1/(3*48) -> mult=round(2^24/144)=116508
+        let rq = requant_for_reduction(9, true, false);
+        assert_eq!(rq.mult, 116_508);
+        assert_eq!(rq.shift, 24);
+        assert_eq!(rq.act_min, 128);
+        assert_eq!(rq.act_max, 255);
+        let rq = requant_for_reduction(27, false, false);
+        assert_eq!(rq.act_min, 0);
+        // relu6 clamps at the synthetic q(6.0)
+        assert_eq!(requant_for_reduction(27, true, true).act_max, 224);
+    }
+
+    #[test]
+    fn qadd_identity_at_zero_point() {
+        let p = QAdd::default_params();
+        assert_eq!(p.apply(128, 128), 128);
+        assert_eq!(p.apply(130, 130), 130); // avg of equal values is the value
+        // (-128 + 127)/2 = -0.5, rounding bias pushes to 0 -> zp
+        assert_eq!(p.apply(0, 255), 128);
+    }
+
+    #[test]
+    fn qadd_is_commutative() {
+        let p = QAdd::default_params();
+        for a in (0u16..=255).step_by(17) {
+            for b in (0u16..=255).step_by(13) {
+                assert_eq!(p.apply(a as u8, b as u8), p.apply(b as u8, a as u8));
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_covers_range() {
+        let samples: Vec<f32> = (-100..=100).map(|v| v as f32 / 10.0).collect();
+        let (scale, zp) = calibrate_minmax(&samples, 1.0);
+        assert!((scale - 20.0 / 255.0).abs() < 1e-6);
+        assert!((127..=128).contains(&zp));
+    }
+
+    #[test]
+    fn quantize_multiplier_roundtrip() {
+        for real in [0.4999, 0.25, 0.1, 0.003, 1.0 / 144.0] {
+            let (m, s) = quantize_multiplier(real);
+            let approx = m as f64 / (1u64 << s.min(63)) as f64 * if s > 63 { 0.0 } else { 1.0 };
+            if s <= 62 {
+                assert!((approx - real).abs() / real < 1e-6, "real={real} m={m} s={s}");
+            }
+            // applying to a mid-size accumulator is close to real * acc
+            let acc = 1_000_000i32;
+            let got = apply_multiplier(acc, m, s);
+            let want = (acc as f64 * real).round() as i32;
+            assert!((got - want).abs() <= 1, "real={real} got={got} want={want}");
+        }
+    }
+}

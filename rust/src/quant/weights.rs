@@ -1,0 +1,105 @@
+//! Deterministic synthetic weight streams — the Rust twin of
+//! `python/compile/weights.py`.
+//!
+//! Golden-model parameters are drawn from named splitmix64 streams seeded by
+//! FNV-1a of the tensor name, so the JAX models and the Rust functional
+//! simulator materialize identical tensors without any weight files:
+//!
+//! ```text
+//! seed    = fnv1a64(tensor_name)
+//! z_i     = splitmix64(seed + (i+1) * GAMMA)
+//! int8  w = (z_i >> 40) % 128 - 64
+//! int32 b = (z_i >> 32) % 2048 - 1024      (stream name + "/bias")
+//! uint8 x = (z_i >> 56)                    (stream name + "/input")
+//! ```
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01B3;
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// FNV-1a 64-bit hash of a tensor name.
+pub fn fnv1a64(name: &str) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Sequential splitmix64 generator.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Seed from a tensor name.
+    pub fn from_name(name: &str) -> Self {
+        Self::new(fnv1a64(name))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GAMMA);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// int8 weights in [-64, 63] for the named tensor.
+pub fn gen_weights_i8(name: &str, n: usize) -> Vec<i8> {
+    let mut rng = SplitMix64::from_name(name);
+    (0..n).map(|_| (((rng.next_u64() >> 40) % 128) as i64 - 64) as i8).collect()
+}
+
+/// int32 biases in [-1024, 1023] for the named tensor.
+pub fn gen_bias_i32(name: &str, n: usize) -> Vec<i32> {
+    let mut rng = SplitMix64::from_name(&format!("{name}/bias"));
+    (0..n).map(|_| (((rng.next_u64() >> 32) % 2048) as i64 - 1024) as i32).collect()
+}
+
+/// uint8 synthetic input frame for the named stream.
+pub fn gen_input_u8(name: &str, n: usize) -> Vec<u8> {
+    let mut rng = SplitMix64::from_name(&format!("{name}/input"));
+    (0..n).map(|_| (rng.next_u64() >> 56) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Pinned against python/tests/test_weights_parity.py.
+        assert_eq!(fnv1a64(""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xAF63_DC4C_8601_EC8C);
+    }
+
+    #[test]
+    fn pinned_first_draws_match_python() {
+        // Twin of test_weights_parity.py::test_pinned_first_draws.
+        assert_eq!(gen_weights_i8("pin", 4), vec![23, 16, -51, 40]);
+        assert_eq!(gen_bias_i32("pin", 4), vec![-244, 620, 735, -874]);
+        assert_eq!(gen_input_u8("pin", 4), vec![65, 45, 205, 4]);
+    }
+
+    #[test]
+    fn ranges_hold() {
+        let w = gen_weights_i8("range-test", 1000);
+        assert!(w.iter().all(|&v| (-64..=63).contains(&v)));
+        let b = gen_bias_i32("range-test", 1000);
+        assert!(b.iter().all(|&v| (-1024..=1023).contains(&v)));
+    }
+
+    #[test]
+    fn name_sensitivity() {
+        assert_ne!(gen_weights_i8("name-a", 64), gen_weights_i8("name-b", 64));
+        assert_eq!(gen_weights_i8("name-a", 64), gen_weights_i8("name-a", 64));
+    }
+}

@@ -1,0 +1,172 @@
+//! PJRT runtime — loads the AOT-compiled JAX artifacts (HLO text) and
+//! executes them on the CPU PJRT client from the Rust request path.
+//!
+//! Interchange is HLO *text*: the image's xla_extension 0.5.1 rejects
+//! jax >= 0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Python never runs at
+//! request time — `make artifacts` is the only compile step.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::graph::Shape;
+use crate::sim::functional::Tensor;
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub input_shape: Shape,
+    /// Output dims as written by aot.py (2 or 3 dims).
+    pub output_dims: Vec<usize>,
+    pub golden_path: PathBuf,
+    pub input_path: PathBuf,
+}
+
+/// Parse `artifacts/manifest.txt`.
+pub fn load_manifest(dir: &Path) -> crate::Result<Vec<ArtifactEntry>> {
+    let text = std::fs::read_to_string(dir.join("manifest.txt"))
+        .with_context(|| format!("reading {}/manifest.txt — run `make artifacts`", dir.display()))?;
+    let mut out = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let kv: HashMap<&str, &str> = line
+            .split_whitespace()
+            .filter_map(|p| p.split_once('='))
+            .collect();
+        let need = |k: &str| -> crate::Result<&str> {
+            kv.get(k).copied().with_context(|| format!("manifest line missing {k}: {line}"))
+        };
+        let dims = |s: &str| -> Vec<usize> { s.split('x').map(|d| d.parse().unwrap_or(0)).collect() };
+        let ishape = dims(need("input")?);
+        anyhow::ensure!(ishape.len() == 3, "input must be HxWxC");
+        out.push(ArtifactEntry {
+            name: need("name")?.to_string(),
+            hlo_path: dir.join(need("hlo")?),
+            input_shape: Shape::new(ishape[0], ishape[1], ishape[2]),
+            output_dims: dims(need("output")?),
+            golden_path: dir.join(need("golden")?),
+            input_path: dir.join(need("inbin")?),
+        });
+    }
+    Ok(out)
+}
+
+/// A compiled, executable model on the PJRT CPU client.
+pub struct LoadedModel {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, many loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn new() -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Runtime { client, models: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&mut self, entry: ArtifactEntry) -> crate::Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(&entry.hlo_path).map_err(to_anyhow)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+        self.models.insert(entry.name.clone(), LoadedModel { entry, exe });
+        Ok(())
+    }
+
+    /// Load every artifact in a manifest directory.
+    pub fn load_all(&mut self, dir: &Path) -> crate::Result<usize> {
+        let entries = load_manifest(dir)?;
+        let n = entries.len();
+        for e in entries {
+            self.load(e)?;
+        }
+        Ok(n)
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.models.get(name).map(|m| &m.entry)
+    }
+
+    /// Execute a model on a uint8 HWC frame; returns the flat uint8 output.
+    pub fn infer(&self, name: &str, frame: &Tensor) -> crate::Result<Vec<u8>> {
+        let m = self.models.get(name).with_context(|| format!("model {name} not loaded"))?;
+        anyhow::ensure!(
+            frame.shape == m.entry.input_shape,
+            "input shape {} != artifact {}",
+            frame.shape,
+            m.entry.input_shape
+        );
+        let s = frame.shape;
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[s.h, s.w, s.c],
+            &frame.data,
+        )
+        .map_err(to_anyhow)?;
+        let result = m.exe.execute::<xla::Literal>(&[lit]).map_err(to_anyhow)?;
+        let out = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = out.to_tuple1().map_err(to_anyhow)?;
+        out.to_vec::<u8>().map_err(to_anyhow)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e:?}")
+}
+
+/// Default artifact directory (repo-relative).
+pub fn default_artifact_dir() -> PathBuf {
+    // honor an env override for tests running from other cwds
+    if let Ok(d) = std::env::var("J3DAI_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_when_present() {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let entries = load_manifest(&dir).unwrap();
+        assert!(entries.len() >= 4);
+        for e in &entries {
+            assert!(e.hlo_path.exists(), "{:?}", e.hlo_path);
+            assert!(e.golden_path.exists());
+            assert!(e.input_path.exists());
+            assert!(e.input_shape.elems() > 0);
+        }
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        let dir = std::env::temp_dir().join("j3dai-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "name=x hlo=x.hlo.txt input=3x3\n").unwrap();
+        assert!(load_manifest(&dir).is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Simulator of the J3DAI digital system.
+//!
+//! Two complementary views of the same machine:
+//!
+//! - **Timed** ([`engine`], [`system`]): executes the compiled per-cluster
+//!   macro-op programs on a two-engine (transfer/compute) timing model with
+//!   DMPA/DMA/TSV bandwidths, per-op controller overhead and host
+//!   orchestration — produces cycle counts and the [`crate::power::Activity`]
+//!   event profile for the energy model. This is what regenerates the
+//!   paper's latency / MAC-efficiency / power rows.
+//!
+//! - **Functional** ([`functional`], [`pe`]): interprets the quantized graph
+//!   with the exact integer semantics of the PE datapath (9-bit multiply,
+//!   32-bit accumulate, fixed-point requantization, PWL NLU). Its outputs
+//!   are compared byte-for-byte against the JAX/Pallas golden artifacts via
+//!   the PJRT runtime — the three-layer equivalence proof.
+
+pub mod engine;
+pub mod functional;
+pub mod host;
+pub mod l2;
+pub mod ncb;
+pub mod pe;
+pub mod system;
+
+pub use engine::ClusterRun;
+pub use system::{simulate, SimResult};

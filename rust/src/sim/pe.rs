@@ -1,0 +1,96 @@
+//! Processing-element datapath model — the integer semantics of one J3DAI
+//! PE: 9-bit multiplier, 32-bit accumulator, ALU, and the non-linear
+//! operation unit (a 16-segment piecewise-linear function table).
+//!
+//! Bit-exact twin of `python/compile/kernels/` (see the parity tests and
+//! the PJRT cross-check in `rust/tests/golden_equivalence.rs`).
+
+use crate::quant::Requant;
+
+/// One multiply-accumulate step: `(a - zp)` is the 9-bit signed activation
+/// operand, `w` the 8-bit weight. Panics in debug builds if the operand
+/// leaves the 9-bit range (it cannot, by construction).
+#[inline(always)]
+pub fn mac(acc: i32, a: u8, zp: i32, w: i8) -> i32 {
+    let xa = a as i32 - zp;
+    debug_assert!((-256..=255).contains(&xa), "9-bit operand range violated");
+    acc + xa * w as i32
+}
+
+/// The NLU's PWL sigmoid table (round(sigmoid(x0/48)*255)) — shared with
+/// `python/compile/kernels/elemwise.py` (NLU_X0 / NLU_BASE / NLU_SLOPE).
+pub const NLU_BASE: [i32; 16] = [1, 2, 5, 9, 17, 30, 53, 86, 128, 168, 202, 225, 238, 246, 250, 253];
+
+/// Segment start points: -256 + 32*i.
+#[inline]
+fn nlu_x0(seg: usize) -> i32 {
+    -256 + 32 * seg as i32
+}
+
+/// Q8 slopes derived from consecutive base points (next of last = 254).
+#[inline]
+fn nlu_slope(seg: usize) -> i32 {
+    let next = if seg == 15 { 254 } else { NLU_BASE[seg + 1] };
+    (next - NLU_BASE[seg]) * 256 / 32
+}
+
+/// PWL sigmoid on a uint8 code with zero point `zp`.
+#[inline]
+pub fn nlu_sigmoid(x: u8, zp: i32) -> u8 {
+    let xv = x as i32 - zp; // [-255, 255]
+    let seg = (((xv + 256) >> 5).clamp(0, 15)) as usize;
+    let y = NLU_BASE[seg] + ((nlu_slope(seg) * (xv - nlu_x0(seg))) >> 8);
+    y.clamp(0, 255) as u8
+}
+
+/// Requantize an accumulator through the shared fixed-point contract.
+#[inline(always)]
+pub fn requant(acc: i32, rq: &Requant) -> u8 {
+    rq.apply(acc)
+}
+
+/// Integer global-average step: `(sum + n/2) / n` over uint8 codes.
+#[inline]
+pub fn avg_round(sum: i64, n: i64) -> u8 {
+    (((sum + n / 2) / n).clamp(0, 255)) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_is_nine_bit_times_eight_bit() {
+        assert_eq!(mac(0, 255, 0, 63), 255 * 63);
+        assert_eq!(mac(0, 0, 255, -64), -255 * -64);
+        assert_eq!(mac(10, 128, 128, 5), 10);
+    }
+
+    #[test]
+    fn nlu_monotone_and_bounded() {
+        let mut prev = 0u8;
+        for x in 0..=255u16 {
+            let y = nlu_sigmoid(x as u8, 128);
+            assert!(y >= prev, "not monotone at {x}");
+            prev = y;
+        }
+        assert!(nlu_sigmoid(0, 128) <= 30); // sigmoid(-128/48) ~ 0.065
+        assert!(nlu_sigmoid(255, 128) >= 225);
+        assert!(nlu_sigmoid(0, 255) <= 4); // full 9-bit swing
+        assert!(nlu_sigmoid(255, 0) >= 250);
+    }
+
+    #[test]
+    fn nlu_midpoint_near_half() {
+        let y = nlu_sigmoid(128, 128) as i32;
+        assert!((y - 128).abs() <= 25, "sigmoid(0) ~ 0.5: got {y}");
+    }
+
+    #[test]
+    fn avg_round_matches_python() {
+        assert_eq!(avg_round(0, 4), 0);
+        assert_eq!(avg_round(2, 4), 1); // (2+2)/4
+        assert_eq!(avg_round(1, 4), 0); // (1+2)/4
+        assert_eq!(avg_round(255 * 9, 9), 255);
+    }
+}

@@ -1,0 +1,173 @@
+//! System-level simulation: compile a graph, run every cluster program,
+//! merge the activity, add host orchestration and DMA-bus contention —
+//! producing the numbers Table I/II report.
+
+use crate::compiler::{self, scheduler, Compiled};
+use crate::config::ArchConfig;
+use crate::graph::Graph;
+use crate::power::{self, Activity, EnergyModel};
+
+/// Full result of simulating one inference.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub model: String,
+    pub total_macs: u64,
+    /// End-to-end cycles (slowest cluster + serial host sections).
+    pub cycles: u64,
+    pub activity: Activity,
+    /// Latency at the configured clock, ms.
+    pub latency_ms: f64,
+    /// MAC/cycle efficiency (Table I/II metric).
+    pub mac_efficiency: f64,
+    /// Program footprint across clusters, bytes.
+    pub program_bytes: usize,
+    /// Host cycles (serial orchestration share).
+    pub host_cycles: u64,
+    /// Maximum sustainable frame rate.
+    pub max_fps: f64,
+}
+
+impl SimResult {
+    /// Power at a frame rate using an energy model (None if the frame rate
+    /// exceeds what the latency allows — the paper prints "-" there).
+    pub fn power_mw(&self, em: &EnergyModel, fps: f64) -> Option<f64> {
+        if fps > self.max_fps {
+            return None;
+        }
+        Some(em.power_mw(&self.activity, fps))
+    }
+
+    /// TOPs/W at a frame rate (Table I "Power efficiency").
+    pub fn tops_per_watt(&self, em: &EnergyModel, fps: f64) -> Option<f64> {
+        if fps > self.max_fps {
+            return None;
+        }
+        Some(em.tops_per_watt(&self.activity, fps))
+    }
+}
+
+/// Simulate one inference of `g` on `cfg`.
+pub fn simulate(g: &Graph, cfg: &ArchConfig) -> crate::Result<SimResult> {
+    let compiled = compiler::compile(g, cfg)?;
+    Ok(simulate_compiled(g, cfg, &compiled))
+}
+
+/// Simulate from an already-compiled artifact (reused by the coordinator).
+pub fn simulate_compiled(g: &Graph, cfg: &ArchConfig, compiled: &Compiled) -> SimResult {
+    // DMA-bus contention: the 64-bit system interconnect is shared by all
+    // clusters; when the DMPA is disabled every cluster's DMA traffic
+    // serializes, modeled as a cycle multiplier equal to the cluster count.
+    let dma_penalty = if cfg.dmpa_enabled { 1 } else { cfg.clusters as u64 };
+
+    let mut activity = Activity::default();
+    let mut slowest = 0u64;
+    let mut busy_total = 0u64;
+    for prog in &compiled.cluster_programs {
+        let run = super::engine::run_cluster(cfg, prog, dma_penalty);
+        slowest = slowest.max(run.cycles);
+        busy_total += run.activity.busy_cluster_cycles;
+        activity.macs += run.activity.macs;
+        activity.local_sram_bytes += run.activity.local_sram_bytes;
+        activity.dmpa_bytes += run.activity.dmpa_bytes;
+        activity.dma_bytes += run.activity.dma_bytes;
+        activity.tsv_bytes += run.activity.tsv_bytes;
+        activity.alu_ops += run.activity.alu_ops;
+    }
+    let host_cycles = scheduler::host_total_cycles(&compiled.host_steps);
+    let cycles = slowest + host_cycles;
+    activity.cycles = cycles;
+    activity.busy_cluster_cycles = busy_total;
+
+    SimResult {
+        model: g.name.clone(),
+        total_macs: g.total_macs(),
+        cycles,
+        latency_ms: power::latency_ms(cfg, cycles),
+        mac_efficiency: activity.macs as f64 / (cycles as f64 * cfg.macs_per_cycle() as f64),
+        program_bytes: compiled.program_bytes(),
+        host_cycles,
+        max_fps: power::max_fps(cfg, cycles),
+        activity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+    use crate::models;
+
+    #[test]
+    fn tinycnn_simulates() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let r = simulate(&g, &ArchConfig::j3dai()).unwrap();
+        assert_eq!(r.total_macs, g.total_macs());
+        assert_eq!(r.activity.macs, g.total_macs());
+        assert!(r.cycles > 0);
+        assert!(r.mac_efficiency > 0.0 && r.mac_efficiency <= 1.0);
+    }
+
+    #[test]
+    fn mbv1_efficiency_beats_mbv2() {
+        // The paper's central Table I shape: MobileNetV1's plain conv
+        // pipeline sustains much higher MAC/cycle than the branching MBv2.
+        let cfg = ArchConfig::j3dai();
+        let v1 = simulate(&models::paper_mbv1(), &cfg).unwrap();
+        let v2 = simulate(&models::paper_mbv2(), &cfg).unwrap();
+        assert!(
+            v1.mac_efficiency > v2.mac_efficiency + 0.1,
+            "v1={} v2={}",
+            v1.mac_efficiency,
+            v2.mac_efficiency
+        );
+    }
+
+    #[test]
+    fn seg_latency_largest() {
+        let cfg = ArchConfig::j3dai();
+        let v1 = simulate(&models::paper_mbv1(), &cfg).unwrap();
+        let v2 = simulate(&models::paper_mbv2(), &cfg).unwrap();
+        let sg = simulate(&models::paper_seg(), &cfg).unwrap();
+        assert!(sg.latency_ms > v1.latency_ms);
+        assert!(v1.latency_ms > v2.latency_ms);
+    }
+
+    #[test]
+    fn seg_cannot_do_200fps() {
+        // Table I prints "-" for segmentation power at 200 FPS: 7.43 ms
+        // latency cannot sustain a 5 ms frame budget.
+        let cfg = ArchConfig::j3dai();
+        let sg = simulate(&models::paper_seg(), &cfg).unwrap();
+        let em = crate::power::EnergyModel::fdsoi28();
+        assert!(sg.latency_ms > 5.0, "latency={}", sg.latency_ms);
+        assert!(sg.power_mw(&em, 200.0).is_none());
+        assert!(sg.power_mw(&em, 30.0).is_some());
+    }
+
+    #[test]
+    fn dmpa_off_slows_everything() {
+        let g = models::mobilenet_v1(1, 4, Shape::new(48, 64, 3), 100);
+        let on = simulate(&g, &ArchConfig::j3dai()).unwrap();
+        let off_cfg = ArchConfig { dmpa_enabled: false, ..ArchConfig::j3dai() };
+        let off = simulate(&g, &off_cfg).unwrap();
+        // at alpha=1/4 compute dominates; the DMA penalty still shows (the
+        // full-size sweep in benches/ablation_dmpa.rs shows the >2x gap)
+        assert!(off.cycles as f64 > on.cycles as f64 * 1.5, "on={} off={}", on.cycles, off.cycles);
+    }
+
+    #[test]
+    fn more_clusters_fewer_cycles() {
+        let g = models::mobilenet_v1(1, 2, Shape::new(96, 128, 3), 100);
+        let c2 = simulate(&g, &ArchConfig::scaled(2, 16, 8)).unwrap();
+        let c6 = simulate(&g, &ArchConfig::scaled(6, 16, 8)).unwrap();
+        assert!(c6.cycles < c2.cycles, "c2={} c6={}", c2.cycles, c6.cycles);
+    }
+
+    #[test]
+    fn activity_macs_equal_graph_macs() {
+        for g in [models::paper_mbv1(), models::paper_mbv2(), models::paper_seg()] {
+            let r = simulate(&g, &ArchConfig::j3dai()).unwrap();
+            assert_eq!(r.activity.macs, g.total_macs(), "{}", g.name);
+        }
+    }
+}

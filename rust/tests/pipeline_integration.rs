@@ -1,0 +1,187 @@
+//! End-to-end pipeline integration: sensor -> coordinator -> PJRT runtime
+//! + cycle simulator, exercising the full L3 stack the way `j3dai serve`
+//! does, plus compiler/simulator integration across configurations.
+
+use j3dai::config::ArchConfig;
+use j3dai::coordinator::{Coordinator, CoordinatorConfig};
+use j3dai::graph::Shape;
+use j3dai::models;
+use j3dai::power::EnergyModel;
+use j3dai::runtime;
+use j3dai::sensor::{subsample, PixelArray};
+use j3dai::sim;
+
+fn artifacts_ready() -> bool {
+    runtime::default_artifact_dir().join("manifest.txt").exists()
+}
+
+#[test]
+fn coordinator_frame_loop_end_to_end() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let coord = Coordinator::new(
+        &runtime::default_artifact_dir(),
+        CoordinatorConfig { target_fps: 120.0, frames: 12, arch: ArchConfig::j3dai() },
+    )
+    .unwrap();
+    let stats = coord.run_model("tinycnn_24x32").unwrap();
+    assert_eq!(stats.frames, 12);
+    assert!(stats.achieved_fps > 1.0, "fps={}", stats.achieved_fps);
+    assert!(stats.mean_service_us > 0.0);
+    assert!(stats.modeled_latency_ms > 0.0);
+    assert!(stats.modeled_power_mw_at_fps > 0.0);
+    // frames vary -> classifications may vary, but all must be valid classes
+    assert!(stats.records.iter().all(|r| r.top_class < 10));
+}
+
+#[test]
+fn coordinator_runs_every_artifact_model() {
+    if !artifacts_ready() {
+        return;
+    }
+    let coord = Coordinator::new(
+        &runtime::default_artifact_dir(),
+        CoordinatorConfig { target_fps: 500.0, frames: 3, arch: ArchConfig::j3dai() },
+    )
+    .unwrap();
+    let mut names = coord.model_names();
+    names.sort();
+    assert_eq!(names.len(), 4);
+    for name in names {
+        let stats = coord.run_model(&name).unwrap();
+        assert_eq!(stats.frames, 3, "{name}");
+    }
+}
+
+#[test]
+fn sensor_feeds_dnn_input_resolutions() {
+    // full chain: 12 Mpix-equivalent capture -> subsample -> DNN input
+    let pixels = PixelArray::new(99);
+    let hi = pixels.capture(0, Shape::new(384, 512, 3));
+    let lo = subsample(&hi, 2);
+    assert_eq!(lo.shape, Shape::new(192, 256, 3)); // classifier input
+}
+
+#[test]
+fn table1_shape_holds_across_the_stack() {
+    // The headline reproduction: per-model latency ordering, efficiency
+    // ordering, and the paper's power ordering all hold simultaneously.
+    let cfg = ArchConfig::j3dai();
+    let em = EnergyModel::fdsoi28();
+    let v1 = sim::simulate(&models::paper_mbv1(), &cfg).unwrap();
+    let v2 = sim::simulate(&models::paper_mbv2(), &cfg).unwrap();
+    let sg = sim::simulate(&models::paper_seg(), &cfg).unwrap();
+
+    // latency: v2 < v1 < seg (paper: 4.04 < 4.96 < 7.43 ms)
+    assert!(v2.latency_ms < v1.latency_ms && v1.latency_ms < sg.latency_ms);
+    // latency within 5% of paper
+    assert!((v1.latency_ms - 4.96).abs() / 4.96 < 0.05, "{}", v1.latency_ms);
+    assert!((v2.latency_ms - 4.04).abs() / 4.04 < 0.05, "{}", v2.latency_ms);
+    assert!((sg.latency_ms - 7.43).abs() / 7.43 < 0.05, "{}", sg.latency_ms);
+    // efficiency: v1 ~ seg >> v2 (paper: 76.8 / 76.5 / 46.6)
+    assert!((v1.mac_efficiency - 0.768).abs() < 0.05);
+    assert!((sg.mac_efficiency - 0.765).abs() < 0.05);
+    assert!((v2.mac_efficiency - 0.466).abs() < 0.05);
+    // power @30FPS within 10% of paper (47.6 / 30.5 / 63.8 mW)
+    let p = |r: &sim::SimResult| r.power_mw(&em, 30.0).unwrap();
+    assert!((p(&v1) - 47.6).abs() / 47.6 < 0.10, "{}", p(&v1));
+    assert!((p(&v2) - 30.5).abs() / 30.5 < 0.10, "{}", p(&v2));
+    assert!((p(&sg) - 63.8).abs() / 63.8 < 0.10, "{}", p(&sg));
+    // power @200FPS: v1/v2 sustain it, seg cannot (paper prints "-")
+    assert!(v1.power_mw(&em, 200.0).is_some());
+    assert!(v2.power_mw(&em, 200.0).is_some());
+    assert!(sg.power_mw(&em, 200.0).is_none());
+}
+
+#[test]
+fn table2_shape_holds() {
+    // J3DAI: smallest chip, fewest MACs, highest power, best GOPS/W/mm^2.
+    let cfg = ArchConfig::j3dai();
+    let em = EnergyModel::fdsoi28();
+    let mbv2 = sim::simulate(&models::paper_mbv2(), &cfg).unwrap();
+    let mut cols = j3dai::report::sony_columns();
+    cols.push(j3dai::report::j3dai_column(&cfg, &mbv2, &em));
+    let j = cols.last().unwrap();
+    for sony in &cols[..2] {
+        assert!(j.chip_mm2 < sony.chip_mm2);
+        assert!(j.dnn_mem_mm2 < sony.dnn_mem_mm2);
+        assert!(j.macs < sony.macs);
+        assert!(j.power_mw_200fps.unwrap() > sony.power_mw_200fps.unwrap());
+        assert!(j.gops_w_mm2().unwrap() > sony.gops_w_mm2().unwrap());
+    }
+    // MAC efficiency between the two SONY points (paper: 13.4 < 46.6 < 59.9)
+    assert!(j.mac_eff_pct > cols[0].mac_eff_pct && j.mac_eff_pct < cols[1].mac_eff_pct);
+}
+
+#[test]
+fn compile_then_simulate_is_deterministic() {
+    let g = models::mobilenet_v1(1, 4, Shape::new(48, 64, 3), 100);
+    let cfg = ArchConfig::j3dai();
+    let a = sim::simulate(&g, &cfg).unwrap();
+    let b = sim::simulate(&g, &cfg).unwrap();
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.activity, b.activity);
+}
+
+#[test]
+fn voltage_scaling_reduces_power_not_latency() {
+    let cfg = ArchConfig::j3dai();
+    let r = sim::simulate(&models::paper_mbv2(), &cfg).unwrap();
+    let em = EnergyModel::fdsoi28();
+    let low = em.at_voltage(0.6, 0.85);
+    assert!(low.power_mw(&r.activity, 30.0) < em.power_mw(&r.activity, 30.0));
+    // latency is a cycle count: unchanged by voltage in this model
+    assert_eq!(r.latency_ms, sim::simulate(&models::paper_mbv2(), &cfg).unwrap().latency_ms);
+}
+
+#[test]
+fn multi_network_interleaved_serving() {
+    // §IV-A: the 5 MB L2 "enables the execution of several networks";
+    // serve classification and segmentation alternately from one runtime
+    // (both artifact sets resident), as a sensor alternating between a
+    // cheap detector and an expensive segmentation pass would.
+    if !artifacts_ready() {
+        return;
+    }
+    let mut rt = j3dai::runtime::Runtime::new().unwrap();
+    rt.load_all(&runtime::default_artifact_dir()).unwrap();
+    let cls = rt.entry("mbv1_w25_48x64").unwrap().clone();
+    let seg = rt.entry("fpnseg_w25_48x64").unwrap().clone();
+    let pixels = PixelArray::new(5);
+    for i in 0..6u64 {
+        let frame = pixels.capture(i, cls.input_shape);
+        let (name, dims) = if i % 2 == 0 {
+            ("mbv1_w25_48x64", &cls.output_dims)
+        } else {
+            ("fpnseg_w25_48x64", &seg.output_dims)
+        };
+        let out = rt.infer(name, &frame).unwrap();
+        assert_eq!(out.len(), dims.iter().product::<usize>(), "{name}");
+    }
+    // and the L2 budget claim itself: both param sets fit simultaneously
+    let cfg = ArchConfig::j3dai();
+    let p1 = models::artifact_graph("mbv1_w25_48x64").unwrap().total_param_bytes();
+    let p2 = models::artifact_graph("fpnseg_w25_48x64").unwrap().total_param_bytes();
+    assert!(p1 + p2 < cfg.l2_bytes() as u64);
+}
+
+#[test]
+fn sim_energy_consistency_between_power_and_coordinator() {
+    // the coordinator's modeled power must equal EnergyModel applied to
+    // the presimulated activity (no duplicated accounting)
+    if !artifacts_ready() {
+        return;
+    }
+    let coord = Coordinator::new(
+        &runtime::default_artifact_dir(),
+        CoordinatorConfig { target_fps: 1000.0, frames: 2, arch: ArchConfig::j3dai() },
+    )
+    .unwrap();
+    let simr = coord.presimulate("tinycnn_24x32").unwrap();
+    let em = EnergyModel::fdsoi28();
+    let stats = coord.run_model("tinycnn_24x32").unwrap();
+    let expect = em.power_mw(&simr.activity, 1000.0f64.min(simr.max_fps));
+    assert!((stats.modeled_power_mw_at_fps - expect).abs() < 1e-9);
+}

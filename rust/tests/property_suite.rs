@@ -1,0 +1,194 @@
+//! Property-based tests over the L3 coordinator-side invariants (the brief:
+//! "proptest on coordinator invariants — routing, batching, state"), using
+//! the in-repo runner (no proptest crate offline).
+
+use j3dai::compiler::{self, mapper};
+use j3dai::config::ArchConfig;
+use j3dai::graph::{Graph, Op, Shape, INPUT};
+use j3dai::isa::{Instr, Program};
+use j3dai::ptest::{check, Gen};
+use j3dai::quant::{QAdd, Requant};
+use j3dai::sim::{engine, pe};
+
+/// Random small CNN graph generator.
+fn random_graph(g: &mut Gen) -> Graph {
+    let h = g.usize_in(8, 40) & !1; // even
+    let w = g.usize_in(8, 48) & !1;
+    let mut gr = Graph::new("prop", Shape::new(h.max(8), w.max(8), 3));
+    let mut last = INPUT;
+    let n_layers = g.usize_in(1, 6);
+    for i in 0..n_layers {
+        let cout = 8 * g.usize_in(1, 6);
+        let stride = if g.bool() { 1 } else { 2 };
+        let cur_shape = if last == INPUT { gr.input } else { gr.layers[last].out_shape };
+        let op = match g.usize_in(0, 2) {
+            0 => Op::Conv { kh: 3, kw: 3, cout, stride, relu: g.bool() },
+            1 => Op::Conv { kh: 1, kw: 1, cout, stride: 1, relu: true },
+            _ => Op::DwConv { stride: if cur_shape.h >= 2 && cur_shape.w >= 2 { stride } else { 1 } },
+        };
+        last = gr.push(format!("prop/l{i}"), op, vec![last]);
+    }
+    gr
+}
+
+#[test]
+fn prop_mac_conservation_any_graph_any_arch() {
+    // The compiler may never lose or duplicate MACs, whatever the graph
+    // shape or array geometry.
+    check("mac-conservation", 40, |g| {
+        let gr = random_graph(g);
+        let cfg = ArchConfig::scaled(g.usize_in(1, 8), *g.pick(&[4, 8, 16]), *g.pick(&[4, 8]));
+        let c = compiler::compile(&gr, &cfg).unwrap();
+        assert_eq!(c.total_macs(), gr.total_macs());
+    });
+}
+
+#[test]
+fn prop_split_rows_partitions_exactly() {
+    check("split-rows", 100, |g| {
+        let m = g.usize_in(0, 10_000);
+        let clusters = g.usize_in(1, 64);
+        let parts = mapper::split_rows(m, clusters);
+        assert_eq!(parts.len(), clusters);
+        assert_eq!(parts.iter().sum::<usize>(), m);
+        let (mn, mx) = (parts.iter().min().unwrap(), parts.iter().max().unwrap());
+        assert!(mx - mn <= 1, "unbalanced split: {parts:?}");
+    });
+}
+
+#[test]
+fn prop_requant_monotone_in_acc() {
+    // requant is monotone: a larger accumulator never yields a smaller code.
+    check("requant-monotone", 60, |g| {
+        let rq = Requant {
+            mult: g.i32_in(1, 1 << 22),
+            shift: g.usize_in(8, 30) as u32,
+            zp_out: g.i32_in(0, 255),
+            act_min: 0,
+            act_max: 255,
+        };
+        let a = g.i32_in(-1_000_000, 1_000_000);
+        let b = g.i32_in(-1_000_000, 1_000_000);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(rq.apply(lo) <= rq.apply(hi));
+    });
+}
+
+#[test]
+fn prop_qadd_bounds_and_symmetry() {
+    check("qadd", 60, |g| {
+        let p = QAdd::default_params();
+        let a = g.u8();
+        let b = g.u8();
+        let y = p.apply(a, b);
+        let (lo, hi) = (a.min(b), a.max(b));
+        // averaging two codes stays within their span (plus rounding slack)
+        assert!(y as i32 >= lo as i32 - 1 && y as i32 <= hi as i32 + 1, "a={a} b={b} y={y}");
+        assert_eq!(p.apply(a, b), p.apply(b, a));
+    });
+}
+
+#[test]
+fn prop_isa_roundtrip() {
+    check("isa-roundtrip", 80, |g| {
+        let instr = match g.usize_in(0, 6) {
+            0 => Instr::DmpaLoad {
+                src: *g.pick(&[j3dai::isa::Space::L2Bottom, j3dai::isa::Space::L2Middle]),
+                src_addr: g.u64() as u32,
+                dst_addr: g.u64() as u32,
+                bytes: g.u64() as u32,
+            },
+            1 => Instr::ConvTile {
+                m: g.u64() as u32,
+                k: g.u64() as u32,
+                n: g.u64() as u32,
+                first: g.bool(),
+                last: g.bool(),
+            },
+            2 => Instr::DwTile { h: g.u64() as u32, w: g.u64() as u32, c: g.u64() as u32, stride: g.usize_in(1, 2) as u8 },
+            3 => Instr::AiuLoop { reg: g.u8(), count: g.u64() as u32, stride: g.u64() as u32 },
+            4 => Instr::AddTile { n: g.u64() as u32 },
+            5 => Instr::Sync,
+            _ => Instr::Halt,
+        };
+        let decoded = Instr::decode(&instr.encode()).unwrap();
+        assert_eq!(instr, decoded);
+    });
+}
+
+#[test]
+fn prop_engine_cycles_monotone_in_work() {
+    // Adding an instruction can never reduce a cluster's cycle count.
+    check("engine-monotone", 40, |g| {
+        let cfg = ArchConfig::j3dai();
+        let mut instrs = Vec::new();
+        for _ in 0..g.usize_in(1, 20) {
+            instrs.push(match g.usize_in(0, 3) {
+                0 => Instr::DmpaLoad {
+                    src: j3dai::isa::Space::L2Bottom,
+                    src_addr: 0,
+                    dst_addr: 0,
+                    bytes: g.u64() as u32 % 100_000,
+                },
+                1 => Instr::ConvTile {
+                    m: g.usize_in(1, 128) as u32,
+                    k: g.usize_in(1, 512) as u32,
+                    n: g.usize_in(1, 128) as u32,
+                    first: true,
+                    last: true,
+                },
+                2 => Instr::Sync,
+                _ => Instr::AddTile { n: g.usize_in(1, 4096) as u32 },
+            });
+        }
+        let base = engine::run_cluster(&cfg, &Program { instrs: instrs.clone() }, 1).cycles;
+        instrs.insert(
+            g.usize_in(0, instrs.len()),
+            Instr::ConvTile { m: 8, k: 8, n: 8, first: true, last: true },
+        );
+        let more = engine::run_cluster(&cfg, &Program { instrs }, 1).cycles;
+        assert!(more >= base, "more={more} base={base}");
+    });
+}
+
+#[test]
+fn prop_nlu_monotone_any_zero_point() {
+    check("nlu-monotone", 30, |g| {
+        let zp = g.i32_in(0, 255);
+        let mut prev = 0u8;
+        for x in 0..=255u16 {
+            let y = pe::nlu_sigmoid(x as u8, zp);
+            assert!(y >= prev, "zp={zp} x={x}");
+            prev = y;
+        }
+    });
+}
+
+#[test]
+fn prop_placement_never_overlaps_live_tensors() {
+    check("placement-liveness", 25, |g| {
+        let gr = random_graph(g);
+        let cfg = ArchConfig::j3dai();
+        let p = mapper::place_memory(&gr, &cfg).unwrap();
+        // recompute liveness and assert no overlap between any tensor and
+        // its consumers' other live inputs
+        let mut last_use = vec![0usize; gr.layers.len()];
+        for (i, l) in gr.layers.iter().enumerate() {
+            for &j in &l.inputs {
+                if j != INPUT {
+                    last_use[j] = i;
+                }
+            }
+        }
+        for i in 0..gr.layers.len() {
+            for j in 0..i {
+                if last_use[j] >= i {
+                    let a = &p.activations[i];
+                    let b = &p.activations[j];
+                    let overlap = a.addr < b.addr + b.bytes && b.addr < a.addr + a.bytes;
+                    assert!(!overlap, "layer {i} clobbers live {j}");
+                }
+            }
+        }
+    });
+}
