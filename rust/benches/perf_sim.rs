@@ -28,6 +28,29 @@ fn main() {
         assert!(macs_per_s > 1e8, "simulator throughput target (EXPERIMENTS.md §Perf)");
     }
 
+    header("perf: traced sim overhead (span collection on)");
+    {
+        let g = models::paper_mbv1();
+        let sample = |f: &mut dyn FnMut()| -> Vec<f64> {
+            (0..5)
+                .map(|_| {
+                    let t = std::time::Instant::now();
+                    f();
+                    t.elapsed().as_secs_f64() * 1e3
+                })
+                .collect()
+        };
+        let plain = sample(&mut || drop(sim::simulate(&g, &cfg)));
+        let traced = sample(&mut || drop(sim::simulate_traced(&g, &cfg)));
+        let (p50p, p50t) = (percentile_ms(&plain, 50.0), percentile_ms(&traced, 50.0));
+        println!(
+            "mbv1 sim p50: {:.2} ms plain / {:.2} ms traced ({:+.1}%)",
+            p50p,
+            p50t,
+            (p50t / p50p - 1.0) * 100.0
+        );
+    }
+
     header("perf: functional PE model (tinycnn, full integer interpret)");
     let g = models::artifact_graph("tinycnn_24x32").unwrap();
     let x = functional::synthetic_input("tinycnn_24x32", g.input);

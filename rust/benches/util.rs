@@ -22,3 +22,12 @@ pub fn time_ms<F: FnMut()>(iters: u32, mut f: F) -> (f64, f64) {
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
 }
+
+/// Percentile of a sample buffer in ms — delegates to the crate's shared
+/// ceil-rank implementation so benches report the same tail definition as
+/// the coordinator and report modules.
+#[allow(dead_code)]
+pub fn percentile_ms(samples: &[f64], p: f64) -> f64 {
+    let mut v = samples.to_vec();
+    j3dai::telemetry::percentile_unsorted(&mut v, p)
+}

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 verification: release build + test suite, plus clippy/fmt when the
+# components are installed (the offline toolchain image may omit them).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== clippy not installed — skipping"
+fi
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check"
+    cargo fmt --check
+else
+    echo "== rustfmt not installed — skipping"
+fi
+
+echo "tier1 OK"

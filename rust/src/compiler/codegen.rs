@@ -71,6 +71,11 @@ pub fn emit(g: &Graph, cfg: &ArchConfig, maps: &[LayerMap]) -> crate::Result<Vec
 
     for map in maps {
         let l = &g.layers[map.layer];
+        // telemetry marker: attribute the following instructions to this
+        // layer in traced simulation (free on both engines)
+        for prog in programs.iter_mut() {
+            prog.instrs.push(Instr::LayerMark { id: map.layer as u32 });
+        }
         let in_shape = if l.inputs[0] == INPUT { g.input } else { g.layers[l.inputs[0]].out_shape };
         // Parameters spill to the middle die for large models: approximate
         // the placement's decision by size (exact partition comes from the
@@ -330,6 +335,24 @@ mod tests {
         let progs = compile_programs(&g, &cfg);
         let any_dmpa = progs.iter().flat_map(|p| &p.instrs).any(|i| matches!(i, Instr::DmpaLoad { .. } | Instr::DmpaStore { .. }));
         assert!(!any_dmpa);
+    }
+
+    #[test]
+    fn every_layer_is_marked_on_every_cluster() {
+        let g = models::paper_mbv1();
+        let cfg = ArchConfig::j3dai();
+        for p in compile_programs(&g, &cfg) {
+            let marks: Vec<u32> = p
+                .instrs
+                .iter()
+                .filter_map(|i| match i {
+                    Instr::LayerMark { id } => Some(*id),
+                    _ => None,
+                })
+                .collect();
+            let expect: Vec<u32> = (0..g.layers.len() as u32).collect();
+            assert_eq!(marks, expect);
+        }
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod scheduler;
 use crate::config::ArchConfig;
 use crate::graph::Graph;
 use crate::isa::Program;
+use crate::telemetry::{Telemetry, COMPILER_PID, PASS_US_BUCKETS};
 
 /// Where a tensor lives in L2 (the memory-placement decision).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,12 +69,45 @@ impl Compiled {
 
 /// Compile a graph for an architecture — the full Fig. 4 flow.
 pub fn compile(g: &Graph, cfg: &ArchConfig) -> crate::Result<Compiled> {
+    compile_traced(g, cfg, None)
+}
+
+/// Run one compiler pass under an optional telemetry domain: a wall-time
+/// span on pid [`COMPILER_PID`] plus a `j3dai_compile_pass_us` histogram
+/// observation.
+fn pass<T>(
+    tel: Option<&Telemetry>,
+    name: &'static str,
+    f: impl FnOnce() -> crate::Result<T>,
+) -> crate::Result<T> {
+    let Some(t) = tel else { return f() };
+    let t0 = t.now_us();
+    let r = t.wall_span(COMPILER_PID, 0, name, "compiler", f);
+    t.registry
+        .histogram_with(
+            "j3dai_compile_pass_us",
+            &[("pass", name)],
+            "Compiler pass wall time (us)",
+            PASS_US_BUCKETS,
+        )
+        .observe(t.now_us() - t0);
+    r
+}
+
+/// [`compile`] with per-pass observability: when `tel` is given, each
+/// pipeline stage is recorded as a wall-time span (pid [`COMPILER_PID`])
+/// and observed into the `j3dai_compile_pass_us` histogram.
+pub fn compile_traced(g: &Graph, cfg: &ArchConfig, tel: Option<&Telemetry>) -> crate::Result<Compiled> {
     g.validate()?;
     cfg.validate()?;
-    let placement = mapper::place_memory(g, cfg)?;
-    let maps = mapper::map_layers(g, cfg, &placement)?;
-    let programs = codegen::emit(g, cfg, &maps)?;
-    let host_steps = scheduler::host_schedule(g, cfg);
+    if let Some(t) = tel {
+        t.name_process(COMPILER_PID, "compiler");
+        t.name_thread(COMPILER_PID, 0, &format!("passes:{}", g.name));
+    }
+    let placement = pass(tel, "place_memory", || mapper::place_memory(g, cfg))?;
+    let maps = pass(tel, "map_layers", || mapper::map_layers(g, cfg, &placement))?;
+    let programs = pass(tel, "codegen", || codegen::emit(g, cfg, &maps))?;
+    let host_steps = pass(tel, "host_schedule", || Ok(scheduler::host_schedule(g, cfg)))?;
     // MAC conservation: the emitted programs must perform exactly the
     // graph's MACs (the mapper may not drop or duplicate work).
     let emitted: u64 = programs.iter().map(|p| p.total_macs()).sum();
@@ -134,6 +168,20 @@ mod tests {
             on.program_bytes(),
             off.program_bytes()
         );
+    }
+
+    #[test]
+    fn compile_traced_records_pass_spans() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let tel = Telemetry::new(true);
+        let c = compile_traced(&g, &ArchConfig::j3dai(), Some(&tel)).unwrap();
+        assert_eq!(c.total_macs(), g.total_macs());
+        let tr = tel.take_trace();
+        let names: Vec<&str> = tr.events.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, ["place_memory", "map_layers", "codegen", "host_schedule"]);
+        assert!(tr.events.iter().all(|e| e.pid == COMPILER_PID));
+        let text = tel.render_metrics();
+        assert!(text.contains("j3dai_compile_pass_us_count{pass=\"codegen\"} 1"), "{text}");
     }
 
     #[test]

@@ -13,17 +13,27 @@
 //! runs here — while accounting latency/energy with the cycle simulator's
 //! per-inference numbers, exactly how the real chip would pair its DNN
 //! accelerator with its host runtime.
+//!
+//! The loop is instrumented end to end: every frame produces `capture` and
+//! `infer` wall-time spans (pid [`FRAME_PID`]), and the service publishes
+//! frame-loop metrics (`j3dai_frames_total`, `j3dai_inference_service_us`,
+//! `j3dai_capture_us`, `j3dai_queue_depth`, `j3dai_achieved_fps`) into the
+//! coordinator's [`Telemetry`] registry — [`RunStats`] is derived from
+//! those series, not from a private tally.
 
 use std::path::Path;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::config::ArchConfig;
-use crate::graph::Shape;
+use crate::graph::{Graph, Shape};
 use crate::power::EnergyModel;
 use crate::runtime::Runtime;
 use crate::sensor::PixelArray;
+use crate::sim::functional::Tensor;
 use crate::sim::{self, SimResult};
+use crate::telemetry::{self, ArgValue, Telemetry, TraceEvent, FRAME_PID, SERVICE_US_BUCKETS};
 
 /// One processed frame.
 #[derive(Debug, Clone)]
@@ -72,6 +82,7 @@ pub struct Coordinator {
     runtime: Runtime,
     energy: EnergyModel,
     cfg: CoordinatorConfig,
+    telemetry: Telemetry,
 }
 
 impl Coordinator {
@@ -81,7 +92,17 @@ impl Coordinator {
         let n = runtime.load_all(dir)?;
         anyhow::ensure!(n > 0, "no artifacts in {}", dir.display());
         log::info!("coordinator: loaded {n} artifacts on {}", runtime.platform());
-        Ok(Coordinator { runtime, energy: EnergyModel::fdsoi28(), cfg })
+        Ok(Coordinator {
+            runtime,
+            energy: EnergyModel::fdsoi28(),
+            cfg,
+            telemetry: Telemetry::new(true),
+        })
+    }
+
+    /// The service's telemetry domain (frame spans + frame-loop metrics).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
     }
 
     /// Cycle-simulate the graph twin of an artifact model.
@@ -100,68 +121,214 @@ impl Coordinator {
             .clone();
         let simr = self.presimulate(name)?;
         let energy_mj = self.energy.inference_mj(&simr.activity);
-
-        // sensor thread: paced frame production with backpressure (bounded
-        // channel of 2 frames — the double-buffered L2 frame slots)
-        let (tx, rx) = mpsc::sync_channel::<(u64, crate::sim::functional::Tensor)>(2);
-        let frames = self.cfg.frames;
-        let period = Duration::from_secs_f64(1.0 / self.cfg.target_fps);
-        let shape: Shape = entry.input_shape;
-        let producer = std::thread::spawn(move || {
-            let pixels = PixelArray::new(0x13DA1);
-            let t0 = Instant::now();
-            for i in 0..frames {
-                let due = period * i as u32;
-                if let Some(sleep) = due.checked_sub(t0.elapsed()) {
-                    std::thread::sleep(sleep);
-                }
-                let frame = pixels.capture(i, shape);
-                if tx.send((i, frame)).is_err() {
-                    break; // consumer gone
-                }
-            }
-        });
-
-        let mut records = Vec::with_capacity(frames as usize);
-        let t0 = Instant::now();
-        while let Ok((i, frame)) = rx.recv() {
-            let s0 = Instant::now();
-            let out = self.runtime.infer(name, &frame)?;
-            let service_us = s0.elapsed().as_secs_f64() * 1e6;
-            let top_class = argmax_class(&out, &entry.output_dims);
-            records.push(FrameRecord {
-                frame_idx: i,
-                top_class,
-                service_us,
-                modeled_latency_ms: simr.latency_ms,
-                modeled_energy_mj: energy_mj,
-            });
-        }
-        producer.join().map_err(|_| anyhow::anyhow!("sensor thread panicked"))?;
-        let wall_s = t0.elapsed().as_secs_f64();
-
-        let mut service: Vec<f64> = records.iter().map(|r| r.service_us).collect();
-        service.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let p99 = service[((service.len() as f64 * 0.99) as usize).min(service.len() - 1)];
-        let mean = service.iter().sum::<f64>() / service.len() as f64;
-        let achieved_fps = records.len() as f64 / wall_s;
-        Ok(RunStats {
-            model: name.to_string(),
-            frames: records.len() as u64,
-            wall_s,
-            achieved_fps,
-            mean_service_us: mean,
-            p99_service_us: p99,
-            modeled_latency_ms: simr.latency_ms,
-            modeled_power_mw_at_fps: self
-                .energy
-                .power_mw(&simr.activity, self.cfg.target_fps.min(simr.max_fps)),
-            records,
-        })
+        let modeled_power =
+            self.energy.power_mw(&simr.activity, self.cfg.target_fps.min(simr.max_fps));
+        run_frame_loop(
+            name,
+            entry.input_shape,
+            &self.cfg,
+            &self.telemetry,
+            simr.latency_ms,
+            energy_mj,
+            modeled_power,
+            |frame| {
+                let out = self.runtime.infer(name, frame)?;
+                Ok(argmax_class(&out, &entry.output_dims))
+            },
+        )
     }
 
     pub fn model_names(&self) -> Vec<String> {
         self.runtime.model_names().into_iter().map(String::from).collect()
+    }
+}
+
+/// Run the frame loop against the *functional* simulator instead of PJRT —
+/// no artifacts or accelerator runtime needed. Powers `j3dai metrics` and
+/// the integration tests; the loop body (sensor thread, backpressure,
+/// telemetry) is exactly the one [`Coordinator::run_model`] uses.
+pub fn run_functional_loop(
+    g: &Graph,
+    ccfg: &CoordinatorConfig,
+    tel: &Telemetry,
+) -> crate::Result<RunStats> {
+    let simr = sim::simulate(g, &ccfg.arch)?;
+    let energy = EnergyModel::fdsoi28();
+    let energy_mj = energy.inference_mj(&simr.activity);
+    let modeled_power = energy.power_mw(&simr.activity, ccfg.target_fps.min(simr.max_fps));
+    run_frame_loop(&g.name, g.input, ccfg, tel, simr.latency_ms, energy_mj, modeled_power, |frame| {
+        let out = sim::functional::run_final(g, frame);
+        Ok(argmax_class(&out.data, &[out.shape.h, out.shape.w, out.shape.c]))
+    })
+}
+
+/// The shared frame loop: paced sensor thread, bounded channel, per-frame
+/// spans and metrics, aggregation. `infer` classifies one frame (its wall
+/// time is the service-time metric).
+#[allow(clippy::too_many_arguments)]
+fn run_frame_loop(
+    model: &str,
+    shape: Shape,
+    ccfg: &CoordinatorConfig,
+    tel: &Telemetry,
+    modeled_latency_ms: f64,
+    modeled_energy_mj: f64,
+    modeled_power_mw: f64,
+    mut infer: impl FnMut(&Tensor) -> crate::Result<usize>,
+) -> crate::Result<RunStats> {
+    let labels: &[(&str, &str)] = &[("model", model)];
+    let frames_total =
+        tel.registry.counter_with("j3dai_frames_total", labels, "Frames fully processed");
+    let service_hist = tel.registry.histogram_with(
+        "j3dai_inference_service_us",
+        labels,
+        "Per-frame inference service time (us)",
+        SERVICE_US_BUCKETS,
+    );
+    let capture_hist = tel.registry.histogram_with(
+        "j3dai_capture_us",
+        labels,
+        "Sensor capture time (us)",
+        SERVICE_US_BUCKETS,
+    );
+    let depth_gauge =
+        tel.registry.gauge_with("j3dai_queue_depth", labels, "Frames waiting in the channel");
+    let fps_gauge =
+        tel.registry.gauge_with("j3dai_achieved_fps", labels, "Achieved frame rate of last run");
+    // snapshots: RunStats is derived from the registry deltas of this run,
+    // so several runs can share one Telemetry domain
+    let (count0, sum0, n0) = (frames_total.get(), service_hist.sum(), service_hist.count());
+    tel.name_process(FRAME_PID, "frame-loop");
+    tel.name_thread(FRAME_PID, 0, "capture");
+    tel.name_thread(FRAME_PID, 1, "infer");
+
+    // sensor thread: paced frame production with backpressure (bounded
+    // channel of 2 frames — the double-buffered L2 frame slots). Capture
+    // timestamps ride the channel so the consumer can record their spans
+    // on the shared telemetry timebase.
+    let (tx, rx) = mpsc::sync_channel::<(u64, Tensor, f64, f64)>(2);
+    let frames = ccfg.frames;
+    let period = Duration::from_secs_f64(1.0 / ccfg.target_fps);
+    let depth = Arc::new(AtomicU64::new(0));
+    let depth_producer = Arc::clone(&depth);
+    let base = Instant::now();
+    let base_us = tel.now_us();
+    let producer = std::thread::spawn(move || {
+        let pixels = PixelArray::new(0x13DA1);
+        let t0 = Instant::now();
+        for i in 0..frames {
+            let due = period * i as u32;
+            if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                std::thread::sleep(sleep);
+            }
+            let cap_ts = base_us + base.elapsed().as_secs_f64() * 1e6;
+            let frame = pixels.capture(i, shape);
+            let cap_dur = base_us + base.elapsed().as_secs_f64() * 1e6 - cap_ts;
+            depth_producer.fetch_add(1, Ordering::Relaxed);
+            if tx.send((i, frame, cap_ts, cap_dur)).is_err() {
+                break; // consumer gone
+            }
+        }
+    });
+
+    let mut records = Vec::with_capacity(frames as usize);
+    let mut loop_err = None;
+    let t0 = Instant::now();
+    while let Ok((i, frame, cap_ts, cap_dur)) = rx.recv() {
+        depth_gauge.set(depth.fetch_sub(1, Ordering::Relaxed).saturating_sub(1) as f64);
+        capture_hist.observe(cap_dur);
+        tel.record(TraceEvent {
+            name: "capture".to_string(),
+            cat: model.to_string(),
+            pid: FRAME_PID,
+            tid: 0,
+            ts_us: cap_ts,
+            dur_us: cap_dur,
+            args: vec![("frame".to_string(), ArgValue::U64(i))],
+        });
+        let s0 = tel.now_us();
+        let top_class = match infer(&frame) {
+            Ok(c) => c,
+            Err(e) => {
+                loop_err = Some(e);
+                break;
+            }
+        };
+        let service_us = tel.now_us() - s0;
+        tel.record(TraceEvent {
+            name: "infer".to_string(),
+            cat: model.to_string(),
+            pid: FRAME_PID,
+            tid: 1,
+            ts_us: s0,
+            dur_us: service_us,
+            args: vec![
+                ("frame".to_string(), ArgValue::U64(i)),
+                ("top_class".to_string(), ArgValue::U64(top_class as u64)),
+            ],
+        });
+        service_hist.observe(service_us);
+        frames_total.inc();
+        records.push(FrameRecord {
+            frame_idx: i,
+            top_class,
+            service_us,
+            modeled_latency_ms,
+            modeled_energy_mj,
+        });
+    }
+    drop(rx); // unblock a producer parked on the bounded channel
+    producer.join().map_err(|_| anyhow::anyhow!("sensor thread panicked"))?;
+    if let Some(e) = loop_err {
+        return Err(e);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let done = frames_total.get() - count0;
+    let (dsum, dn) = (service_hist.sum() - sum0, service_hist.count() - n0);
+    let mean = if dn > 0 { dsum / dn as f64 } else { 0.0 };
+    let stats = aggregate_stats(
+        model,
+        records,
+        done,
+        mean,
+        wall_s,
+        modeled_latency_ms,
+        modeled_power_mw,
+    );
+    fps_gauge.set(stats.achieved_fps);
+    Ok(stats)
+}
+
+/// Fold records into [`RunStats`]. Total-function by construction: zero
+/// frames (a `frames == 0` config, or a producer that died before its first
+/// send) yields a well-formed all-zero result instead of an index underflow.
+fn aggregate_stats(
+    model: &str,
+    records: Vec<FrameRecord>,
+    frames: u64,
+    mean_service_us: f64,
+    wall_s: f64,
+    modeled_latency_ms: f64,
+    modeled_power_mw_at_fps: f64,
+) -> RunStats {
+    let mut service: Vec<f64> = records.iter().map(|r| r.service_us).collect();
+    let p99 = if service.is_empty() {
+        0.0
+    } else {
+        telemetry::percentile_unsorted(&mut service, 99.0)
+    };
+    let achieved_fps = if wall_s > 0.0 { records.len() as f64 / wall_s } else { 0.0 };
+    RunStats {
+        model: model.to_string(),
+        frames,
+        wall_s,
+        achieved_fps,
+        mean_service_us,
+        p99_service_us: p99,
+        modeled_latency_ms,
+        modeled_power_mw_at_fps,
+        records,
     }
 }
 
@@ -205,5 +372,35 @@ mod tests {
         let c = CoordinatorConfig::default();
         assert_eq!(c.target_fps, 30.0);
         assert!(c.frames > 0);
+    }
+
+    #[test]
+    fn aggregate_handles_zero_frames() {
+        // regression: the old path indexed service[len-1] and divided by
+        // len, both of which blow up on an empty run
+        let s = aggregate_stats("m", Vec::new(), 0, 0.0, 0.01, 1.0, 2.0);
+        assert_eq!(s.frames, 0);
+        assert_eq!(s.mean_service_us, 0.0);
+        assert_eq!(s.p99_service_us, 0.0);
+        assert_eq!(s.achieved_fps, 0.0);
+        assert!(s.records.is_empty());
+        assert_eq!(s.modeled_latency_ms, 1.0);
+    }
+
+    #[test]
+    fn aggregate_p99_uses_ceil_rank() {
+        let rec = |us: f64| FrameRecord {
+            frame_idx: 0,
+            top_class: 0,
+            service_us: us,
+            modeled_latency_ms: 0.0,
+            modeled_energy_mj: 0.0,
+        };
+        let records: Vec<FrameRecord> = [10.0, 20.0, 1000.0].map(rec).into();
+        let s = aggregate_stats("m", records, 3, 0.0, 1.0, 0.0, 0.0);
+        // 3 samples: truncation would pick index 2 here too, but ceil-rank
+        // guarantees the tail value for every small n
+        assert_eq!(s.p99_service_us, 1000.0);
+        assert_eq!(s.achieved_fps, 3.0);
     }
 }

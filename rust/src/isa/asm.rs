@@ -101,6 +101,7 @@ pub fn parse_line(line: &str) -> crate::Result<Option<Instr>> {
             let dims: Vec<u32> = toks[1].split('x').map(|d| d.parse().unwrap_or(0)).collect();
             Instr::PoolTile { h: dims[0], w: dims[1], c: dims[2] }
         }
+        "layer.mark" => Instr::LayerMark { id: parse_num(toks[1].trim_start_matches("id="))? },
         "sync" => Instr::Sync,
         "halt" => Instr::Halt,
         other => anyhow::bail!("unknown mnemonic {other}"),

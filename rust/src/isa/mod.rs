@@ -61,6 +61,11 @@ pub enum Instr {
     AddTile { n: u32 },
     ActTile { n: u32, nlu: bool },
     PoolTile { h: u32, w: u32, c: u32 },
+    /// Telemetry marker: all following instructions belong to graph layer
+    /// `id`. Zero-cost on both engines; the traced simulator uses it to
+    /// attribute per-instruction spans to layers (codegen emits one per
+    /// layer per cluster).
+    LayerMark { id: u32 },
     /// Barrier: wait until both engines of this cluster are idle.
     Sync,
     /// Signal the host (interrupt) and stop.
@@ -80,7 +85,11 @@ impl Instr {
             | Instr::AddTile { .. }
             | Instr::ActTile { .. }
             | Instr::PoolTile { .. } => Engine::Compute,
-            Instr::AiuLoop { .. } | Instr::RouteCfg { .. } | Instr::Sync | Instr::Halt => Engine::Control,
+            Instr::AiuLoop { .. }
+            | Instr::RouteCfg { .. }
+            | Instr::LayerMark { .. }
+            | Instr::Sync
+            | Instr::Halt => Engine::Control,
         }
     }
 
@@ -115,6 +124,26 @@ impl Instr {
         }
     }
 
+    /// Short mnemonic (also the traced simulator's span label).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::DmpaLoad { .. } => "dmpa.load",
+            Instr::DmpaStore { .. } => "dmpa.store",
+            Instr::DmaLoad { .. } => "dma.load",
+            Instr::DmaStore { .. } => "dma.store",
+            Instr::AiuLoop { .. } => "aiu.loop",
+            Instr::RouteCfg { .. } => "route.cfg",
+            Instr::ConvTile { .. } => "conv.tile",
+            Instr::DwTile { .. } => "dw.tile",
+            Instr::AddTile { .. } => "add.tile",
+            Instr::ActTile { .. } => "act.tile",
+            Instr::PoolTile { .. } => "pool.tile",
+            Instr::LayerMark { .. } => "layer.mark",
+            Instr::Sync => "sync",
+            Instr::Halt => "halt",
+        }
+    }
+
     fn opcode(&self) -> u8 {
         match self {
             Instr::DmpaLoad { .. } => 0x01,
@@ -123,6 +152,7 @@ impl Instr {
             Instr::DmaStore { .. } => 0x04,
             Instr::AiuLoop { .. } => 0x05,
             Instr::RouteCfg { .. } => 0x06,
+            Instr::LayerMark { .. } => 0x07,
             Instr::ConvTile { .. } => 0x10,
             Instr::DwTile { .. } => 0x11,
             Instr::AddTile { .. } => 0x12,
@@ -161,6 +191,7 @@ impl Instr {
                 put(&mut w, 8, *stride);
             }
             Instr::RouteCfg { pattern } => w[1] = *pattern,
+            Instr::LayerMark { id } => put(&mut w, 4, *id),
             Instr::ConvTile { m, k, n, first, last } => {
                 w[1] = (*first as u8) | ((*last as u8) << 1);
                 put(&mut w, 4, *m);
@@ -199,6 +230,7 @@ impl Instr {
             0x04 => Instr::DmaStore { dst: code_space(w[1])?, dst_addr: get(4), src_addr: get(8), bytes: get(12) },
             0x05 => Instr::AiuLoop { reg: w[1], count: get(4), stride: get(8) },
             0x06 => Instr::RouteCfg { pattern: w[1] },
+            0x07 => Instr::LayerMark { id: get(4) },
             0x10 => Instr::ConvTile { m: get(4), k: get(8), n: get(12), first: w[1] & 1 != 0, last: w[1] & 2 != 0 },
             0x11 => Instr::DwTile { h: get(4), w: get(8), c: get(12), stride: w[1] },
             0x12 => Instr::AddTile { n: get(4) },
@@ -252,6 +284,7 @@ impl fmt::Display for Instr {
             Instr::AddTile { n } => write!(f, "add.tile   n={n}"),
             Instr::ActTile { n, nlu } => write!(f, "act.tile   n={n}{}", if *nlu { " nlu" } else { "" }),
             Instr::PoolTile { h, w, c } => write!(f, "pool.tile  {h}x{w}x{c}"),
+            Instr::LayerMark { id } => write!(f, "layer.mark id={id}"),
             Instr::Sync => write!(f, "sync"),
             Instr::Halt => write!(f, "halt"),
         }

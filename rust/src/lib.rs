@@ -28,6 +28,9 @@
 //!   golden path; python is never on the request path)
 //! - [`coordinator`] — the frame-loop service tying sensor, simulator and
 //!   runtime together with an FPS governor and metrics
+//! - [`telemetry`] — crate-wide observability: metrics registry
+//!   (Prometheus-style text), span tracing (Chrome trace-event / Perfetto
+//!   export) and the shared percentile helper — see docs/OBSERVABILITY.md
 //! - [`report`]   — renders the paper's tables/figures from measurements
 //! - [`ptest`]    — tiny in-repo property-test runner (offline registry has
 //!   no proptest crate)
@@ -45,6 +48,7 @@ pub mod report;
 pub mod runtime;
 pub mod sensor;
 pub mod sim;
+pub mod telemetry;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

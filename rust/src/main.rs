@@ -1,8 +1,11 @@
 //! j3dai CLI — the leader entrypoint.
 //!
 //! ```text
-//! j3dai serve  [--model NAME] [--fps N] [--frames N]   run the frame loop
-//! j3dai sim    [--model mbv1|mbv2|seg|all]             cycle-simulate Table I workloads
+//! j3dai serve  [--model NAME] [--fps N] [--frames N] [--trace-out F]   run the frame loop
+//! j3dai sim    [--model mbv1|mbv2|seg|all] [--trace-out F]   cycle-simulate Table I workloads
+//! j3dai trace  [--model NAME] [--out trace.json]       traced sim -> Perfetto trace + layer table
+//! j3dai metrics [--model NAME] [--frames N]            functional frame loop -> Prometheus text
+//! j3dai bench-telemetry [--out BENCH_telemetry.json]   tracing-overhead benchmark file
 //! j3dai table1 | table2 | fig5 | fig6                  print a paper table/figure
 //! j3dai compile [--model ...]                          show mapping/schedule report
 //! j3dai list                                           list loaded artifacts
@@ -11,16 +14,27 @@
 //! (Hand-rolled argument parsing: the offline registry has no clap.)
 
 use j3dai::config::ArchConfig;
-use j3dai::coordinator::{Coordinator, CoordinatorConfig};
+use j3dai::coordinator::{self, Coordinator, CoordinatorConfig};
 use j3dai::power::{area, EnergyModel};
+use j3dai::telemetry::Telemetry;
 use j3dai::{compiler, models, report, runtime, sim};
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Canonical model key: long-form names alias the paper keys.
+fn model_key(name: &str) -> &str {
+    match name {
+        "mobilenet_v1" | "mobilenetv1" => "mbv1",
+        "mobilenet_v2" | "mobilenetv2" => "mbv2",
+        "fpnseg" | "segmentation" => "seg",
+        other => other,
+    }
+}
+
 fn paper_graph(key: &str) -> Option<j3dai::graph::Graph> {
-    match key {
+    match model_key(key) {
         "mbv1" => Some(models::paper_mbv1()),
         "mbv2" => Some(models::paper_mbv2()),
         "seg" => Some(models::paper_seg()),
@@ -59,14 +73,31 @@ fn run() -> j3dai::Result<()> {
                 "PJRT service: mean {:.0} us, p99 {:.0} us | modeled accel: {:.2} ms/inf, {:.1} mW @ {:.0} FPS",
                 stats.mean_service_us, stats.p99_service_us, stats.modeled_latency_ms, stats.modeled_power_mw_at_fps, fps
             );
+            if let Some(path) = flag(&args, "--trace-out") {
+                std::fs::write(&path, coord.telemetry().export_chrome_json())?;
+                println!("frame-loop trace written to {path} (open in ui.perfetto.dev)");
+            }
         }
         "sim" => {
             let which = flag(&args, "--model").unwrap_or_else(|| "all".into());
-            let keys: Vec<&str> =
-                if which == "all" { vec!["mbv1", "mbv2", "seg"] } else { vec![which.as_str()] };
-            for key in keys {
+            let keys: Vec<&str> = if which == "all" {
+                vec!["mbv1", "mbv2", "seg"]
+            } else {
+                vec![model_key(&which)]
+            };
+            let trace_out = flag(&args, "--trace-out");
+            let mut merged = j3dai::telemetry::TraceBuilder::new();
+            for (mi, &key) in keys.iter().enumerate() {
                 let g = paper_graph(key).ok_or_else(|| anyhow::anyhow!("unknown model {key}"))?;
-                let r = sim::simulate(&g, &cfg)?;
+                let r = if trace_out.is_some() {
+                    let (r, mut tr) = sim::simulate_traced(&g, &cfg)?;
+                    // one process row per model so timelines don't interleave
+                    tr.trace.shift_pid(mi as u32 * 10);
+                    merged.merge(tr.trace);
+                    r
+                } else {
+                    sim::simulate(&g, &cfg)?
+                };
                 println!(
                     "{:<14} {:>6.0} MMACs  {:>8} cycles  {:.2} ms  eff {:.1}%  P@30 {}",
                     r.model,
@@ -85,6 +116,74 @@ fn run() -> j3dai::Result<()> {
                     );
                 }
             }
+            if let Some(path) = trace_out {
+                std::fs::write(&path, merged.to_chrome_json())?;
+                println!("sim trace written to {path} (open in ui.perfetto.dev)");
+            }
+        }
+        "trace" => {
+            let key = flag(&args, "--model").unwrap_or_else(|| "mbv1".into());
+            let out = flag(&args, "--out").unwrap_or_else(|| "trace.json".into());
+            let g = paper_graph(&key).ok_or_else(|| anyhow::anyhow!("unknown model {key}"))?;
+            let tel = Telemetry::new(true);
+            let c = compiler::compile_traced(&g, &cfg, Some(&tel))?;
+            let (r, mut tr) = sim::simulate_compiled_traced(&g, &cfg, &c);
+            tr.trace.merge(tel.take_trace()); // compiler-pass wall spans
+            std::fs::write(&out, tr.trace.to_chrome_json())?;
+            print!("{}", report::render_layer_table(&tr));
+            println!(
+                "\n{}: {:.2} ms/inference, MAC eff {:.1}% — {} spans written to {out}",
+                r.model,
+                r.latency_ms,
+                r.mac_efficiency * 100.0,
+                tr.trace.len()
+            );
+            println!("open in ui.perfetto.dev (\"Open trace file\") or chrome://tracing");
+        }
+        "metrics" => {
+            let key = flag(&args, "--model").unwrap_or_else(|| "tinycnn_24x32".into());
+            let frames: u64 = flag(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(30);
+            let fps: f64 = flag(&args, "--fps").and_then(|v| v.parse().ok()).unwrap_or(1000.0);
+            let g = paper_graph(&key).ok_or_else(|| anyhow::anyhow!("unknown model {key}"))?;
+            let tel = Telemetry::new(false); // metrics only; no span buffer
+            let ccfg = CoordinatorConfig { target_fps: fps, frames, arch: cfg };
+            let stats = coordinator::run_functional_loop(&g, &ccfg, &tel)?;
+            print!("{}", tel.render_metrics());
+            eprintln!(
+                "# {} frames, mean {:.0} us, p99 {:.0} us",
+                stats.frames, stats.mean_service_us, stats.p99_service_us
+            );
+        }
+        "bench-telemetry" => {
+            let out = flag(&args, "--out").unwrap_or_else(|| "BENCH_telemetry.json".into());
+            let iters: usize = flag(&args, "--iters").and_then(|v| v.parse().ok()).unwrap_or(3);
+            let mut entries = Vec::new();
+            for key in ["mbv1", "mbv2", "seg"] {
+                let g = paper_graph(key).unwrap();
+                let c = compiler::compile(&g, &cfg)?;
+                let r = sim::simulate(&g, &cfg)?;
+                let wall_ms = |f: &dyn Fn()| {
+                    let t0 = std::time::Instant::now();
+                    f();
+                    t0.elapsed().as_secs_f64() * 1e3
+                };
+                let plain: Vec<f64> = (0..iters)
+                    .map(|_| wall_ms(&|| drop(sim::simulate(&g, &cfg))))
+                    .collect();
+                let traced: Vec<f64> = (0..iters)
+                    .map(|_| wall_ms(&|| drop(sim::simulate_compiled_traced(&g, &cfg, &c))))
+                    .collect();
+                entries.push(report::BenchEntry {
+                    model: g.name.clone(),
+                    latency_ms: r.latency_ms,
+                    mac_eff: r.mac_efficiency,
+                    plain_wall_ms: plain,
+                    traced_wall_ms: traced,
+                });
+                println!("benched {key}: {:.2} ms modeled latency", r.latency_ms);
+            }
+            std::fs::write(&out, report::bench_telemetry_json(&entries))?;
+            println!("wrote {out}");
         }
         "table1" => {
             let rows = [
@@ -161,7 +260,9 @@ fn run() -> j3dai::Result<()> {
         }
         _ => {
             println!("j3dai — J3DAI (ISLPED'25) digital-system reproduction");
-            println!("commands: serve | sim | table1 | table2 | fig5 | fig6 | compile | list");
+            println!(
+                "commands: serve | sim | trace | metrics | bench-telemetry | table1 | table2 | fig5 | fig6 | compile | list"
+            );
         }
     }
     Ok(())

@@ -1,8 +1,11 @@
-//! Table/figure rendering — formats measurements as the paper prints them.
+//! Table/figure rendering — formats measurements as the paper prints them,
+//! plus the telemetry views: the per-layer breakdown table behind
+//! `j3dai trace` and the machine-readable `BENCH_telemetry.json`.
 
 use crate::config::ArchConfig;
 use crate::power::{area, EnergyModel};
-use crate::sim::SimResult;
+use crate::sim::{SimResult, SimTrace};
+use crate::telemetry::{self, json};
 
 /// One column of Table I.
 #[derive(Debug, Clone)]
@@ -214,9 +217,128 @@ pub fn render_fig6() -> String {
     s
 }
 
+/// Terminal per-layer breakdown of a traced simulation: where the cycles,
+/// stalls, bytes and MAC efficiency go, layer by layer.
+pub fn render_layer_table(tr: &SimTrace) -> String {
+    let mut s = format!(
+        "Per-layer breakdown — {} @ {:.0} MHz ({} layers)\n",
+        tr.model,
+        1e3 / tr.clock_ns,
+        tr.layers.len()
+    );
+    s.push_str(&format!(
+        "{:<4} {:<16} {:>10} {:>10} {:>10} {:>10} {:>12} {:>12} {:>9}\n",
+        "#", "Layer", "Cycles", "Comp busy", "Xfer busy", "Stall", "MACs", "Bytes", "Eff %"
+    ));
+    let (mut cyc, mut stall, mut macs, mut bytes) = (0u64, 0u64, 0u64, 0u64);
+    for l in &tr.layers {
+        s.push_str(&format!(
+            "{:<4} {:<16} {:>10} {:>10} {:>10} {:>10} {:>12} {:>12} {:>9.1}\n",
+            l.layer,
+            l.name,
+            l.cycles,
+            l.compute_busy,
+            l.xfer_busy,
+            l.stall_cycles,
+            l.macs,
+            l.bytes,
+            l.mac_efficiency * 100.0
+        ));
+        cyc += l.cycles;
+        stall += l.stall_cycles;
+        macs += l.macs;
+        bytes += l.bytes;
+    }
+    s.push_str(&format!(
+        "{:<4} {:<16} {:>10} {:>10} {:>10} {:>10} {:>12} {:>12}\n",
+        "", "total", cyc, "", "", stall, macs, bytes
+    ));
+    s
+}
+
+/// One model's entry for `BENCH_telemetry.json`.
+#[derive(Debug, Clone)]
+pub struct BenchEntry {
+    pub model: String,
+    /// Modeled inference latency (cycle simulator), ms.
+    pub latency_ms: f64,
+    /// MAC/cycle efficiency of the modeled run.
+    pub mac_eff: f64,
+    /// Wall-clock of untraced `simulate` runs, ms.
+    pub plain_wall_ms: Vec<f64>,
+    /// Wall-clock of traced `simulate_traced` runs, ms.
+    pub traced_wall_ms: Vec<f64>,
+}
+
+/// Render the machine-readable benchmark file: per-model modeled numbers
+/// plus the tracing overhead (p50 traced vs p50 plain wall time). Uses the
+/// shared [`telemetry::percentile`] helper.
+pub fn bench_telemetry_json(entries: &[BenchEntry]) -> String {
+    let p50 = |samples: &[f64]| {
+        let mut v = samples.to_vec();
+        telemetry::percentile_unsorted(&mut v, 50.0)
+    };
+    let mut s = String::from("{\n  \"benchmarks\": [");
+    for (i, e) in entries.iter().enumerate() {
+        let plain = p50(&e.plain_wall_ms);
+        let traced = p50(&e.traced_wall_ms);
+        let overhead_pct = if plain.is_finite() && plain > 0.0 && traced.is_finite() {
+            (traced / plain - 1.0) * 100.0
+        } else {
+            0.0
+        };
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"model\": \"{}\", \"latency_ms\": {}, \"mac_eff\": {}, \
+             \"sim_wall_ms_p50\": {}, \"traced_wall_ms_p50\": {}, \"trace_overhead_pct\": {}}}",
+            json::escape(&e.model),
+            json::fmt_f64(e.latency_ms),
+            json::fmt_f64(e.mac_eff),
+            json::fmt_f64(plain),
+            json::fmt_f64(traced),
+            json::fmt_f64(overhead_pct),
+        ));
+    }
+    s.push_str("\n  ]\n}\n");
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn layer_table_renders_all_layers() {
+        let g = crate::models::tinycnn(crate::graph::Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        let (_, tr) = crate::sim::simulate_traced(&g, &cfg).unwrap();
+        let t = render_layer_table(&tr);
+        for l in &g.layers {
+            assert!(t.contains(&l.name), "missing layer {} in:\n{t}", l.name);
+        }
+        assert!(t.contains("total"));
+    }
+
+    #[test]
+    fn bench_json_is_valid_and_has_overhead() {
+        let e = BenchEntry {
+            model: "mbv1".into(),
+            latency_ms: 4.9,
+            mac_eff: 0.76,
+            plain_wall_ms: vec![2.0, 2.2, 2.1],
+            traced_wall_ms: vec![2.4, 2.2, 2.3],
+        };
+        let text = bench_telemetry_json(&[e]);
+        let doc = json::Json::parse(&text).unwrap();
+        let arr = doc.get("benchmarks").and_then(json::Json::as_arr).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("model").and_then(json::Json::as_str), Some("mbv1"));
+        // p50 plain = 2.1, p50 traced = 2.3 -> ~9.5% overhead
+        let ov = arr[0].get("trace_overhead_pct").and_then(json::Json::as_f64).unwrap();
+        assert!((ov - (2.3 / 2.1 - 1.0) * 100.0).abs() < 1e-9);
+    }
 
     #[test]
     fn sony_columns_match_paper_ratios() {

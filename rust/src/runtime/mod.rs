@@ -55,16 +55,20 @@ pub fn load_manifest(dir: &Path) -> crate::Result<Vec<ArtifactEntry>> {
 }
 
 /// A compiled, executable model on the PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct LoadedModel {
     pub entry: ArtifactEntry,
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// The PJRT runtime: one CPU client, many loaded executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     models: HashMap<String, LoadedModel>,
 }
+
+#[cfg(feature = "pjrt")]
 
 impl Runtime {
     /// Create the CPU PJRT client.
@@ -128,8 +132,53 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn to_anyhow(e: xla::Error) -> anyhow::Error {
     anyhow::anyhow!("{e:?}")
+}
+
+/// Stub runtime for builds without the `pjrt` feature (the xla_extension
+/// toolchain image provides the real one). Construction fails with a clear
+/// message; every caller already handles `Runtime::new()` errors, and the
+/// functional paths (`j3dai metrics`, the cycle simulator, the telemetry
+/// stack) don't need PJRT at all.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn new() -> crate::Result<Self> {
+        anyhow::bail!(
+            "PJRT runtime not built — enable the `pjrt` cargo feature (needs the xla crate \
+             from the xla_extension image)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn load(&mut self, _entry: ArtifactEntry) -> crate::Result<()> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn load_all(&mut self, _dir: &Path) -> crate::Result<usize> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn entry(&self, _name: &str) -> Option<&ArtifactEntry> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn infer(&self, _name: &str, _frame: &Tensor) -> crate::Result<Vec<u8>> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
 }
 
 /// Default artifact directory (repo-relative).

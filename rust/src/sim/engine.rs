@@ -59,14 +59,63 @@ pub fn xfer_cycles(cfg: &ArchConfig, i: &Instr) -> u64 {
     }
 }
 
-/// Run one program; `dma_penalty` multiplies DMA cycles (shared-bus
-/// contention across clusters, applied by the system level).
-pub fn run_cluster(cfg: &ArchConfig, prog: &Program, dma_penalty: u64) -> ClusterRun {
+/// One instruction occupancy interval on a cluster engine, in cluster
+/// cycles. Produced by [`run_cluster_traced`]; the system level converts
+/// these to trace-event spans.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstrSpan {
+    /// Instruction mnemonic (span label).
+    pub label: &'static str,
+    /// Which engine timeline the interval occupies.
+    pub engine: crate::isa::Engine,
+    /// Start cycle (inclusive).
+    pub start: u64,
+    /// End cycle (exclusive); `end - start` is the instruction's duration.
+    pub end: u64,
+    /// Bytes moved (transfer instructions only).
+    pub bytes: u64,
+    /// MACs performed (compute instructions only).
+    pub macs: u64,
+    /// Owning graph layer, from the preceding `layer.mark` (u32::MAX if none).
+    pub layer: u32,
+}
+
+/// Where the traced engine delivers spans. `ENABLED` is a compile-time
+/// constant, so the untraced instantiation ([`NullSink`]) monomorphizes to
+/// exactly the old loop — disabled tracing costs nothing.
+pub trait SpanSink {
+    const ENABLED: bool;
+    fn record(&mut self, span: InstrSpan);
+}
+
+/// The no-op sink backing [`run_cluster`].
+pub struct NullSink;
+
+impl SpanSink for NullSink {
+    const ENABLED: bool = false;
+    #[inline(always)]
+    fn record(&mut self, _span: InstrSpan) {}
+}
+
+impl SpanSink for Vec<InstrSpan> {
+    const ENABLED: bool = true;
+    fn record(&mut self, span: InstrSpan) {
+        self.push(span);
+    }
+}
+
+fn run_cluster_impl<S: SpanSink>(
+    cfg: &ArchConfig,
+    prog: &Program,
+    dma_penalty: u64,
+    sink: &mut S,
+) -> ClusterRun {
     let mut xfer_t: u64 = 0;
     let mut comp_t: u64 = 0;
     let mut act = Activity::default();
     let mut compute_busy = 0u64;
     let mut xfer_busy = 0u64;
+    let mut cur_layer = u32::MAX;
 
     for i in &prog.instrs {
         match i {
@@ -76,6 +125,7 @@ pub fn run_cluster(cfg: &ArchConfig, prog: &Program, dma_penalty: u64) -> Cluste
                 comp_t = t;
             }
             Instr::Halt => break,
+            Instr::LayerMark { id } => cur_layer = *id,
             Instr::AiuLoop { .. } => {
                 // loop setup rides the control path: one cycle on compute
                 comp_t += 1;
@@ -83,6 +133,17 @@ pub fn run_cluster(cfg: &ArchConfig, prog: &Program, dma_penalty: u64) -> Cluste
             _ if i.engine() == crate::isa::Engine::Xfer => {
                 let is_dma = matches!(i, Instr::DmaLoad { .. } | Instr::DmaStore { .. });
                 let dur = xfer_cycles(cfg, i) * if is_dma { dma_penalty } else { 1 };
+                if S::ENABLED {
+                    sink.record(InstrSpan {
+                        label: i.mnemonic(),
+                        engine: crate::isa::Engine::Xfer,
+                        start: xfer_t,
+                        end: xfer_t + dur,
+                        bytes: i.xfer_bytes(),
+                        macs: 0,
+                        layer: cur_layer,
+                    });
+                }
                 xfer_t += dur;
                 xfer_busy += dur;
                 let bytes = i.xfer_bytes();
@@ -99,6 +160,17 @@ pub fn run_cluster(cfg: &ArchConfig, prog: &Program, dma_penalty: u64) -> Cluste
             }
             _ => {
                 let dur = compute_cycles(cfg, i);
+                if S::ENABLED && dur > 0 {
+                    sink.record(InstrSpan {
+                        label: i.mnemonic(),
+                        engine: crate::isa::Engine::Compute,
+                        start: comp_t,
+                        end: comp_t + dur,
+                        bytes: 0,
+                        macs: i.macs(),
+                        layer: cur_layer,
+                    });
+                }
                 comp_t += dur;
                 compute_busy += dur;
                 act.macs += i.macs();
@@ -123,6 +195,24 @@ pub fn run_cluster(cfg: &ArchConfig, prog: &Program, dma_penalty: u64) -> Cluste
     act.cycles = cycles;
     act.busy_cluster_cycles = compute_busy.max(xfer_busy);
     ClusterRun { cycles, activity: act, compute_busy, xfer_busy }
+}
+
+/// Run one program; `dma_penalty` multiplies DMA cycles (shared-bus
+/// contention across clusters, applied by the system level).
+pub fn run_cluster(cfg: &ArchConfig, prog: &Program, dma_penalty: u64) -> ClusterRun {
+    run_cluster_impl(cfg, prog, dma_penalty, &mut NullSink)
+}
+
+/// [`run_cluster`], also returning one [`InstrSpan`] per cycle-consuming
+/// instruction. The `ClusterRun` is bit-identical to the untraced path.
+pub fn run_cluster_traced(
+    cfg: &ArchConfig,
+    prog: &Program,
+    dma_penalty: u64,
+) -> (ClusterRun, Vec<InstrSpan>) {
+    let mut spans = Vec::with_capacity(prog.instrs.len());
+    let run = run_cluster_impl(cfg, prog, dma_penalty, &mut spans);
+    (run, spans)
 }
 
 #[cfg(test)]
@@ -192,6 +282,125 @@ mod tests {
         assert_eq!(r.activity.tsv_bytes, 1000);
         assert_eq!(r.activity.macs, 8 * 16 * 16);
         assert_eq!(r.activity.alu_ops, 500);
+    }
+
+    /// A hand-built two-tile program with the double-buffering shape codegen
+    /// emits: load tile 0; sync; (compute tile 0 || load tile 1); sync;
+    /// compute tile 1; store; halt.
+    fn two_tile_program() -> Program {
+        let load = |addr: u32| Instr::DmpaLoad {
+            src: Space::L2Bottom,
+            src_addr: addr,
+            dst_addr: 0,
+            bytes: 4096,
+        };
+        let conv = Instr::ConvTile { m: 8, k: 64, n: 16, first: true, last: true };
+        Program {
+            instrs: vec![
+                Instr::LayerMark { id: 0 },
+                load(0x0),
+                Instr::Sync,
+                conv.clone(),
+                load(0x1000),
+                Instr::Sync,
+                Instr::LayerMark { id: 1 },
+                conv,
+                Instr::DmpaStore { dst: Space::L2Middle, dst_addr: 0, src_addr: 0, bytes: 512 },
+                Instr::Sync,
+                Instr::Halt,
+            ],
+        }
+    }
+
+    #[test]
+    fn busy_cycles_account_for_total() {
+        let c = cfg();
+        let prog = two_tile_program();
+        let r = run_cluster(&c, &prog, 1);
+        // compute idle time is exactly total minus busy; both engines fit
+        // inside the run
+        assert!(r.compute_busy <= r.cycles);
+        assert!(r.xfer_busy <= r.cycles);
+        let idle = r.cycles - r.compute_busy;
+        assert_eq!(r.compute_busy + idle, r.cycles);
+        assert!(r.compute_busy > 0 && r.xfer_busy > 0);
+        // each sync-delimited step costs max(xfer, compute), so the whole
+        // run is at most the sum of busies and at least the larger one
+        assert!(r.cycles <= r.compute_busy + r.xfer_busy);
+        assert!(r.cycles >= r.compute_busy.max(r.xfer_busy));
+    }
+
+    #[test]
+    fn two_tile_overlap_step_is_max_of_engines() {
+        let c = cfg();
+        let prog = two_tile_program();
+        let r = run_cluster(&c, &prog, 1);
+        let load_cyc = xfer_cycles(&c, &prog.instrs[1]);
+        let conv_cyc = compute_cycles(&c, &prog.instrs[3]);
+        let store_cyc = xfer_cycles(&c, &prog.instrs[8]);
+        // step 1: load alone; step 2: conv || load -> max; step 3: conv || store -> max
+        let expect = load_cyc + conv_cyc.max(load_cyc) + conv_cyc.max(store_cyc);
+        assert_eq!(r.cycles, expect);
+        assert_eq!(r.compute_busy, 2 * conv_cyc);
+        assert_eq!(r.xfer_busy, 2 * load_cyc + store_cyc);
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_and_spans_cover_busy() {
+        let c = cfg();
+        let prog = two_tile_program();
+        let plain = run_cluster(&c, &prog, 1);
+        let (traced, spans) = run_cluster_traced(&c, &prog, 1);
+        assert_eq!(plain.cycles, traced.cycles);
+        assert_eq!(plain.compute_busy, traced.compute_busy);
+        assert_eq!(plain.xfer_busy, traced.xfer_busy);
+        assert_eq!(plain.activity.macs, traced.activity.macs);
+
+        // span durations per engine sum exactly to the busy counters
+        let sum = |e: crate::isa::Engine| {
+            spans
+                .iter()
+                .filter(|s| s.engine == e)
+                .map(|s| s.end - s.start)
+                .sum::<u64>()
+        };
+        assert_eq!(sum(crate::isa::Engine::Compute), traced.compute_busy);
+        assert_eq!(sum(crate::isa::Engine::Xfer), traced.xfer_busy);
+        // 2 convs + 2 loads + 1 store, each attributed to its layer.mark
+        assert_eq!(spans.len(), 5);
+        assert!(spans.iter().all(|s| s.end > s.start));
+        assert_eq!(spans.iter().filter(|s| s.layer == 0).count(), 3);
+        assert_eq!(spans.iter().filter(|s| s.layer == 1).count(), 2);
+        // spans on one engine never overlap (sorted issue order)
+        for e in [crate::isa::Engine::Compute, crate::isa::Engine::Xfer] {
+            let mut last_end = 0;
+            for s in spans.iter().filter(|s| s.engine == e) {
+                assert!(s.start >= last_end);
+                last_end = s.end;
+            }
+        }
+    }
+
+    #[test]
+    fn layer_mark_costs_nothing() {
+        let c = cfg();
+        let mut marked = two_tile_program();
+        let plain = Program {
+            instrs: marked
+                .instrs
+                .iter()
+                .filter(|i| !matches!(i, Instr::LayerMark { .. }))
+                .cloned()
+                .collect(),
+        };
+        let rm = run_cluster(&c, &marked, 1);
+        let rp = run_cluster(&c, &plain, 1);
+        assert_eq!(rm.cycles, rp.cycles);
+        assert_eq!(rm.activity.macs, rp.activity.macs);
+        // and it encodes/decodes like any other word
+        marked.instrs.truncate(1);
+        let bytes = marked.assemble();
+        assert_eq!(Program::disassemble(&bytes).unwrap().instrs, marked.instrs);
     }
 
     #[test]

@@ -23,5 +23,5 @@ pub mod ncb;
 pub mod pe;
 pub mod system;
 
-pub use engine::ClusterRun;
-pub use system::{simulate, SimResult};
+pub use engine::{run_cluster_traced, ClusterRun, InstrSpan};
+pub use system::{simulate, simulate_traced, LayerStats, SimResult, SimTrace};

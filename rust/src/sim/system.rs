@@ -2,10 +2,13 @@
 //! merge the activity, add host orchestration and DMA-bus contention —
 //! producing the numbers Table I/II report.
 
+use super::engine::{run_cluster, run_cluster_traced, ClusterRun, InstrSpan};
 use crate::compiler::{self, scheduler, Compiled};
 use crate::config::ArchConfig;
 use crate::graph::Graph;
+use crate::isa::Engine;
 use crate::power::{self, Activity, EnergyModel};
+use crate::telemetry::{ArgValue, TraceBuilder, SIM_PID};
 
 /// Full result of simulating one inference.
 #[derive(Debug, Clone)]
@@ -52,18 +55,31 @@ pub fn simulate(g: &Graph, cfg: &ArchConfig) -> crate::Result<SimResult> {
     Ok(simulate_compiled(g, cfg, &compiled))
 }
 
+/// DMA-bus contention: the 64-bit system interconnect is shared by all
+/// clusters; when the DMPA is disabled every cluster's DMA traffic
+/// serializes, modeled as a cycle multiplier equal to the cluster count.
+fn dma_penalty(cfg: &ArchConfig) -> u64 {
+    if cfg.dmpa_enabled {
+        1
+    } else {
+        cfg.clusters as u64
+    }
+}
+
 /// Simulate from an already-compiled artifact (reused by the coordinator).
 pub fn simulate_compiled(g: &Graph, cfg: &ArchConfig, compiled: &Compiled) -> SimResult {
-    // DMA-bus contention: the 64-bit system interconnect is shared by all
-    // clusters; when the DMPA is disabled every cluster's DMA traffic
-    // serializes, modeled as a cycle multiplier equal to the cluster count.
-    let dma_penalty = if cfg.dmpa_enabled { 1 } else { cfg.clusters as u64 };
+    let penalty = dma_penalty(cfg);
+    let runs: Vec<ClusterRun> =
+        compiled.cluster_programs.iter().map(|p| run_cluster(cfg, p, penalty)).collect();
+    finish(g, cfg, compiled, &runs)
+}
 
+/// Merge per-cluster runs into the system-level result.
+fn finish(g: &Graph, cfg: &ArchConfig, compiled: &Compiled, runs: &[ClusterRun]) -> SimResult {
     let mut activity = Activity::default();
     let mut slowest = 0u64;
     let mut busy_total = 0u64;
-    for prog in &compiled.cluster_programs {
-        let run = super::engine::run_cluster(cfg, prog, dma_penalty);
+    for run in runs {
         slowest = slowest.max(run.cycles);
         busy_total += run.activity.busy_cluster_cycles;
         activity.macs += run.activity.macs;
@@ -89,6 +105,193 @@ pub fn simulate_compiled(g: &Graph, cfg: &ArchConfig, compiled: &Compiled) -> Si
         max_fps: power::max_fps(cfg, cycles),
         activity,
     }
+}
+
+/// Per-layer cycle/byte/MAC breakdown, aggregated from instruction spans
+/// across every cluster (the `j3dai trace` table and `BENCH_telemetry.json`
+/// both read this).
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    /// Graph layer index.
+    pub layer: usize,
+    pub name: String,
+    /// Layer extent in cluster cycles (latest span end − earliest start
+    /// across all clusters).
+    pub cycles: u64,
+    /// Compute-engine busy cycles summed over clusters.
+    pub compute_busy: u64,
+    /// Transfer-engine busy cycles summed over clusters.
+    pub xfer_busy: u64,
+    /// Per-cluster extent minus the busier engine, summed — cycles neither
+    /// engine could hide behind the other.
+    pub stall_cycles: u64,
+    pub macs: u64,
+    /// Bytes moved by transfer instructions.
+    pub bytes: u64,
+    /// `macs / (cycles * chip MAC lanes)` — the Table I metric, per layer.
+    pub mac_efficiency: f64,
+}
+
+/// Trace output of one simulated inference: the per-layer table plus a
+/// [`TraceBuilder`] holding instruction, layer and host spans on simulated
+/// time (pid [`SIM_PID`]).
+#[derive(Debug, Clone)]
+pub struct SimTrace {
+    pub model: String,
+    /// Cycle→time conversion used for the span timestamps.
+    pub clock_ns: f64,
+    pub layers: Vec<LayerStats>,
+    pub trace: TraceBuilder,
+}
+
+/// [`simulate`], also producing per-layer stats and a Perfetto-loadable
+/// span trace.
+pub fn simulate_traced(g: &Graph, cfg: &ArchConfig) -> crate::Result<(SimResult, SimTrace)> {
+    let compiled = compiler::compile(g, cfg)?;
+    Ok(simulate_compiled_traced(g, cfg, &compiled))
+}
+
+/// [`simulate_compiled`] with span collection. The `SimResult` matches the
+/// untraced path exactly.
+pub fn simulate_compiled_traced(
+    g: &Graph,
+    cfg: &ArchConfig,
+    compiled: &Compiled,
+) -> (SimResult, SimTrace) {
+    let penalty = dma_penalty(cfg);
+    let mut runs = Vec::with_capacity(compiled.cluster_programs.len());
+    let mut cluster_spans = Vec::with_capacity(compiled.cluster_programs.len());
+    for prog in &compiled.cluster_programs {
+        let (run, spans) = run_cluster_traced(cfg, prog, penalty);
+        runs.push(run);
+        cluster_spans.push(spans);
+    }
+    let result = finish(g, cfg, compiled, &runs);
+    let trace = build_sim_trace(g, cfg, compiled, &runs, &cluster_spans);
+    (result, trace)
+}
+
+fn layer_name(g: &Graph, id: u32) -> &str {
+    g.layers.get(id as usize).map(|l| l.name.as_str()).unwrap_or("setup")
+}
+
+fn build_sim_trace(
+    g: &Graph,
+    cfg: &ArchConfig,
+    compiled: &Compiled,
+    runs: &[ClusterRun],
+    cluster_spans: &[Vec<InstrSpan>],
+) -> SimTrace {
+    let clock_ns = cfg.clock_ns();
+    let us = |cyc: u64| cyc as f64 * clock_ns / 1000.0;
+    let nclusters = cluster_spans.len() as u32;
+    let layers_tid = nclusters * 2;
+    let host_tid = nclusters * 2 + 1;
+
+    let mut tb = TraceBuilder::new();
+    tb.name_process(SIM_PID, &format!("sim:{}", g.name));
+    for ci in 0..cluster_spans.len() {
+        tb.name_thread(SIM_PID, ci as u32 * 2, &format!("cluster{ci}/COMPUTE"));
+        tb.name_thread(SIM_PID, ci as u32 * 2 + 1, &format!("cluster{ci}/XFER"));
+    }
+    tb.name_thread(SIM_PID, layers_tid, "layers");
+    tb.name_thread(SIM_PID, host_tid, "host");
+
+    // instruction spans, one track pair per cluster
+    for (ci, spans) in cluster_spans.iter().enumerate() {
+        for s in spans {
+            let tid = ci as u32 * 2 + u32::from(s.engine == Engine::Xfer);
+            let mut args = vec![("layer".to_string(), ArgValue::U64(s.layer as u64))];
+            if s.bytes > 0 {
+                args.push(("bytes".to_string(), ArgValue::U64(s.bytes)));
+            }
+            if s.macs > 0 {
+                args.push(("macs".to_string(), ArgValue::U64(s.macs)));
+            }
+            tb.span(SIM_PID, tid, s.label, layer_name(g, s.layer), us(s.start), us(s.end - s.start), args);
+        }
+    }
+
+    // per-layer aggregation + one span per layer on the "layers" track
+    let mut layers = Vec::with_capacity(g.layers.len());
+    for (li, layer) in g.layers.iter().enumerate() {
+        let mut start = u64::MAX;
+        let mut end = 0u64;
+        let (mut comp, mut xfer, mut stall, mut macs, mut bytes) = (0u64, 0, 0, 0, 0);
+        for spans in cluster_spans {
+            let (mut c_start, mut c_end) = (u64::MAX, 0u64);
+            let (mut c_comp, mut c_xfer) = (0u64, 0u64);
+            for s in spans.iter().filter(|s| s.layer as usize == li) {
+                c_start = c_start.min(s.start);
+                c_end = c_end.max(s.end);
+                match s.engine {
+                    Engine::Xfer => c_xfer += s.end - s.start,
+                    _ => c_comp += s.end - s.start,
+                }
+                macs += s.macs;
+                bytes += s.bytes;
+            }
+            if c_end == 0 {
+                continue; // layer has no work on this cluster
+            }
+            start = start.min(c_start);
+            end = end.max(c_end);
+            comp += c_comp;
+            xfer += c_xfer;
+            stall += (c_end - c_start) - c_comp.max(c_xfer);
+        }
+        if end == 0 {
+            continue; // no cycle-consuming instructions anywhere
+        }
+        let cycles = end - start;
+        tb.span(
+            SIM_PID,
+            layers_tid,
+            &layer.name,
+            "layer",
+            us(start),
+            us(cycles),
+            vec![
+                ("bytes".to_string(), ArgValue::U64(bytes)),
+                ("compute_busy".to_string(), ArgValue::U64(comp)),
+                ("macs".to_string(), ArgValue::U64(macs)),
+                ("stall".to_string(), ArgValue::U64(stall)),
+                ("xfer_busy".to_string(), ArgValue::U64(xfer)),
+            ],
+        );
+        layers.push(LayerStats {
+            layer: li,
+            name: layer.name.clone(),
+            cycles,
+            compute_busy: comp,
+            xfer_busy: xfer,
+            stall_cycles: stall,
+            macs,
+            bytes,
+            mac_efficiency: if cycles > 0 {
+                macs as f64 / (cycles as f64 * cfg.macs_per_cycle() as f64)
+            } else {
+                0.0
+            },
+        });
+    }
+
+    // host orchestration tail, serialized after the slowest cluster
+    let mut t = runs.iter().map(|r| r.cycles).max().unwrap_or(0);
+    for step in &compiled.host_steps {
+        tb.span(
+            SIM_PID,
+            host_tid,
+            &step.layer,
+            "host",
+            us(t),
+            us(step.host_cycles),
+            Vec::new(),
+        );
+        t += step.host_cycles;
+    }
+
+    SimTrace { model: g.name.clone(), clock_ns, layers, trace: tb }
 }
 
 #[cfg(test)]
@@ -161,6 +364,43 @@ mod tests {
         let c2 = simulate(&g, &ArchConfig::scaled(2, 16, 8)).unwrap();
         let c6 = simulate(&g, &ArchConfig::scaled(6, 16, 8)).unwrap();
         assert!(c6.cycles < c2.cycles, "c2={} c6={}", c2.cycles, c6.cycles);
+    }
+
+    #[test]
+    fn traced_matches_untraced() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        let plain = simulate(&g, &cfg).unwrap();
+        let (traced, tr) = simulate_traced(&g, &cfg).unwrap();
+        assert_eq!(plain.cycles, traced.cycles);
+        assert_eq!(plain.activity.macs, traced.activity.macs);
+        assert_eq!(plain.host_cycles, traced.host_cycles);
+        // every graph layer got a stats row and a span on the layers track
+        assert_eq!(tr.layers.len(), g.layers.len());
+        // layer MACs sum back to the graph total
+        assert_eq!(tr.layers.iter().map(|l| l.macs).sum::<u64>(), g.total_macs());
+    }
+
+    #[test]
+    fn trace_has_compute_and_xfer_tracks() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        let (_, tr) = simulate_traced(&g, &cfg).unwrap();
+        assert_eq!(tr.trace.thread_label(SIM_PID, 0), Some("cluster0/COMPUTE"));
+        assert_eq!(tr.trace.thread_label(SIM_PID, 1), Some("cluster0/XFER"));
+        let layers_tid = cfg.clusters as u32 * 2;
+        assert_eq!(tr.trace.thread_label(SIM_PID, layers_tid), Some("layers"));
+        assert_eq!(tr.trace.thread_label(SIM_PID, layers_tid + 1), Some("host"));
+        // both engines actually carry spans, and host spans follow the clusters
+        assert!(tr.trace.events.iter().any(|e| e.tid == 0));
+        assert!(tr.trace.events.iter().any(|e| e.tid == 1));
+        assert!(tr.trace.events.iter().any(|e| e.tid == layers_tid + 1));
+        // per-layer busy never exceeds clusters * extent
+        for l in &tr.layers {
+            assert!(l.compute_busy <= l.cycles * cfg.clusters as u64, "{}", l.name);
+            assert!(l.xfer_busy <= l.cycles * cfg.clusters as u64, "{}", l.name);
+            assert!(l.mac_efficiency <= 1.0);
+        }
     }
 
     #[test]

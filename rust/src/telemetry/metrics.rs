@@ -1,0 +1,365 @@
+//! Lock-cheap metrics registry — counters, gauges and fixed-bucket
+//! histograms with a Prometheus-style text exposition renderer.
+//!
+//! Design constraints (ROADMAP: heavy traffic, no external crates):
+//!
+//! - **Hot path is atomic-only.** Handles ([`Counter`], [`Gauge`],
+//!   [`Histogram`]) are `Arc`s over atomics; `inc`/`set`/`observe` never
+//!   take a lock. The registry mutex is touched only at registration and
+//!   render time.
+//! - **Fixed buckets.** Histograms use caller-supplied upper bounds plus an
+//!   implicit `+Inf` bucket; exposition follows the Prometheus cumulative-
+//!   bucket convention, so the output scrapes cleanly.
+//! - **Offline.** The renderer returns a `String`; serving it over HTTP is
+//!   the caller's business (`j3dai metrics` prints it to stdout).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::json;
+
+/// Monotonically increasing counter.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (stored as f64 bits).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct HistogramCore {
+    /// Upper bounds of the finite buckets (ascending); the `+Inf` bucket is
+    /// implicit as `counts.last()`.
+    bounds: Vec<f64>,
+    /// Per-bucket observation counts, len == bounds.len() + 1.
+    counts: Vec<AtomicU64>,
+    /// Exact running sum of observed values (f64 bits, CAS-updated).
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Fixed-bucket histogram. `sum`/`count` are exact; bucket counts feed the
+/// exposition and coarse percentile queries.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    fn with_bounds(bounds: &[f64]) -> Self {
+        let mut b = bounds.to_vec();
+        b.sort_by(|a, x| a.partial_cmp(x).unwrap());
+        let counts = (0..=b.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram(Arc::new(HistogramCore {
+            bounds: b,
+            counts,
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            count: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn observe(&self, v: f64) {
+        let c = &self.0;
+        let idx = c.bounds.iter().position(|b| v <= *b).unwrap_or(c.bounds.len());
+        c.counts[idx].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = c.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match c.sum_bits.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Exact mean of all observations (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    base: String,
+    /// Rendered label pairs (`model="mbv1"`), empty when unlabeled.
+    labels: String,
+    help: String,
+    metric: Metric,
+}
+
+/// The registry: name+labels -> metric. Get-or-create semantics so callers
+/// can re-register the same series from any code path and share the handle.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<BTreeMap<String, Entry>>,
+}
+
+fn label_str(labels: &[(&str, &str)]) -> String {
+    labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", json::escape(v)))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// `name{labels}` or bare `name`; `extra` appends one more pair (for `le`).
+fn series(base: &str, labels: &str, extra: Option<&str>) -> String {
+    let inner = match (labels.is_empty(), extra) {
+        (true, None) => return base.to_string(),
+        (true, Some(e)) => e.to_string(),
+        (false, None) => labels.to_string(),
+        (false, Some(e)) => format!("{labels},{e}"),
+    };
+    format!("{base}{{{inner}}}")
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        self.counter_with(name, &[], help)
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Counter {
+        let ls = label_str(labels);
+        let key = series(name, &ls, None);
+        let mut m = self.entries.lock().unwrap();
+        let e = m.entry(key).or_insert_with(|| Entry {
+            base: name.to_string(),
+            labels: ls,
+            help: help.to_string(),
+            metric: Metric::Counter(Counter::default()),
+        });
+        match &e.metric {
+            Metric::Counter(c) => c.clone(),
+            other => panic!("metric {name} already registered as {}", other.type_name()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        self.gauge_with(name, &[], help)
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Gauge {
+        let ls = label_str(labels);
+        let key = series(name, &ls, None);
+        let mut m = self.entries.lock().unwrap();
+        let e = m.entry(key).or_insert_with(|| Entry {
+            base: name.to_string(),
+            labels: ls,
+            help: help.to_string(),
+            metric: Metric::Gauge(Gauge::default()),
+        });
+        match &e.metric {
+            Metric::Gauge(g) => g.clone(),
+            other => panic!("metric {name} already registered as {}", other.type_name()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Histogram {
+        self.histogram_with(name, &[], help, bounds)
+    }
+
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        bounds: &[f64],
+    ) -> Histogram {
+        let ls = label_str(labels);
+        let key = series(name, &ls, None);
+        let mut m = self.entries.lock().unwrap();
+        let e = m.entry(key).or_insert_with(|| Entry {
+            base: name.to_string(),
+            labels: ls,
+            help: help.to_string(),
+            metric: Metric::Histogram(Histogram::with_bounds(bounds)),
+        });
+        match &e.metric {
+            Metric::Histogram(h) => h.clone(),
+            other => panic!("metric {name} already registered as {}", other.type_name()),
+        }
+    }
+
+    /// Render the Prometheus text exposition format (spec v0.0.4).
+    pub fn render(&self) -> String {
+        let m = self.entries.lock().unwrap();
+        let mut out = String::new();
+        let mut last_base: Option<&str> = None;
+        for e in m.values() {
+            if last_base != Some(e.base.as_str()) {
+                if !e.help.is_empty() {
+                    out.push_str(&format!("# HELP {} {}\n", e.base, e.help));
+                }
+                out.push_str(&format!("# TYPE {} {}\n", e.base, e.metric.type_name()));
+                last_base = Some(e.base.as_str());
+            }
+            match &e.metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("{} {}\n", series(&e.base, &e.labels, None), c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!(
+                        "{} {}\n",
+                        series(&e.base, &e.labels, None),
+                        json::fmt_f64(g.get())
+                    ));
+                }
+                Metric::Histogram(h) => {
+                    let core = &h.0;
+                    let bucket_base = format!("{}_bucket", e.base);
+                    let mut cum = 0u64;
+                    for (i, b) in core.bounds.iter().enumerate() {
+                        cum += core.counts[i].load(Ordering::Relaxed);
+                        let le = format!("le=\"{}\"", json::fmt_f64(*b));
+                        out.push_str(&format!(
+                            "{} {}\n",
+                            series(&bucket_base, &e.labels, Some(&le)),
+                            cum
+                        ));
+                    }
+                    cum += core.counts[core.bounds.len()].load(Ordering::Relaxed);
+                    out.push_str(&format!(
+                        "{} {}\n",
+                        series(&bucket_base, &e.labels, Some("le=\"+Inf\"")),
+                        cum
+                    ));
+                    out.push_str(&format!(
+                        "{} {}\n",
+                        series(&format!("{}_sum", e.base), &e.labels, None),
+                        json::fmt_f64(h.sum())
+                    ));
+                    out.push_str(&format!(
+                        "{} {}\n",
+                        series(&format!("{}_count", e.base), &e.labels, None),
+                        h.count()
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("j3dai_frames_total", "frames");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // re-registration returns the same series
+        assert_eq!(r.counter("j3dai_frames_total", "frames").get(), 5);
+        let g = r.gauge("j3dai_queue_depth", "depth");
+        g.set(2.0);
+        assert_eq!(g.get(), 2.0);
+    }
+
+    #[test]
+    fn histogram_buckets_cumulative() {
+        let r = Registry::new();
+        let h = r.histogram("svc_us", "service", &[10.0, 100.0]);
+        for v in [5.0, 7.0, 50.0, 1000.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 1062.0).abs() < 1e-9);
+        assert!((h.mean() - 265.5).abs() < 1e-9);
+        let text = r.render();
+        assert!(text.contains("# TYPE svc_us histogram"));
+        assert!(text.contains("svc_us_bucket{le=\"10\"} 2"));
+        assert!(text.contains("svc_us_bucket{le=\"100\"} 3"));
+        assert!(text.contains("svc_us_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("svc_us_count 4"));
+    }
+
+    #[test]
+    fn labels_render_inline() {
+        let r = Registry::new();
+        r.counter_with("frames_total", &[("model", "mbv1")], "frames").add(3);
+        r.counter_with("frames_total", &[("model", "mbv2")], "frames").add(7);
+        let text = r.render();
+        assert!(text.contains("frames_total{model=\"mbv1\"} 3"));
+        assert!(text.contains("frames_total{model=\"mbv2\"} 7"));
+        // one TYPE header for the family
+        assert_eq!(text.matches("# TYPE frames_total counter").count(), 1);
+    }
+
+    #[test]
+    fn labeled_histogram_merges_le() {
+        let r = Registry::new();
+        let h = r.histogram_with("svc", &[("model", "x")], "", &[1.0]);
+        h.observe(0.5);
+        let text = r.render();
+        assert!(text.contains("svc_bucket{model=\"x\",le=\"1\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn render_is_deterministic() {
+        let r = Registry::new();
+        r.counter("b_total", "").inc();
+        r.gauge("a_gauge", "").set(1.0);
+        assert_eq!(r.render(), r.render());
+        // BTreeMap ordering: a_gauge before b_total
+        let text = r.render();
+        assert!(text.find("a_gauge").unwrap() < text.find("b_total").unwrap());
+    }
+}

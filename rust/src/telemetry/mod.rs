@@ -1,0 +1,217 @@
+//! Crate-wide telemetry: metrics registry, span tracing, and exporters.
+//!
+//! The paper's whole argument is PPA — per-inference latency, power and MAC
+//! efficiency — so every layer of this stack can explain *where* its cycles
+//! and microseconds go:
+//!
+//! - [`metrics`] — lock-cheap counters/gauges/histograms with a
+//!   Prometheus-style text renderer (`j3dai metrics`).
+//! - [`trace`] — span collection and the Chrome trace-event exporter
+//!   (`j3dai trace --model mbv1 --out trace.json`, open in Perfetto).
+//! - [`json`] — dependency-free JSON emit/parse shared by the exporters.
+//!
+//! Span producers live next to the code they observe: the cycle engine
+//! ([`crate::sim::engine::run_cluster_traced`]) records per-instruction
+//! spans on per-cluster COMPUTE/XFER tracks, the system simulator
+//! ([`crate::sim::simulate_traced`]) adds per-layer and host spans, the
+//! compiler ([`crate::compiler::compile_traced`]) records per-pass wall
+//! spans, and the coordinator publishes per-frame spans and the frame-loop
+//! metrics. Tracing is strictly opt-in: the untraced sim path is
+//! monomorphized over a no-op sink, so disabled tracing costs nothing
+//! (asserted by `tests/telemetry_integration.rs`).
+
+pub mod json;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use trace::{ArgValue, TraceBuilder, TraceEvent, COMPILER_PID, FRAME_PID, SIM_PID};
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Service-time histogram bounds in microseconds (frame loop).
+pub const SERVICE_US_BUCKETS: &[f64] = &[
+    50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0, 5000.0, 10_000.0, 25_000.0, 50_000.0, 100_000.0,
+];
+
+/// Compiler-pass duration histogram bounds in microseconds.
+pub const PASS_US_BUCKETS: &[f64] =
+    &[10.0, 50.0, 100.0, 500.0, 1000.0, 5000.0, 25_000.0, 100_000.0];
+
+/// Exact nearest-rank percentile with a **ceil-based rank**: for `n`
+/// samples and percentile `p`, the rank is `ceil(p/100 * n)` (1-based), so
+/// small sample counts report the tail rather than the median (p99 of 10
+/// samples is the maximum, not the 9th value truncation would give).
+///
+/// `sorted` must be ascending; returns NaN on an empty slice. This is the
+/// one shared percentile implementation — the coordinator, report and
+/// benches all call it.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Sort samples and take a percentile (convenience for callers holding an
+/// unsorted buffer).
+pub fn percentile_unsorted(samples: &mut [f64], p: f64) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    percentile(samples, p)
+}
+
+/// One telemetry domain: a metrics registry plus an optional wall-clock
+/// span collector. Metrics are always live (atomic-only hot path); span
+/// recording is gated on `tracing` and costs one branch when off.
+pub struct Telemetry {
+    tracing: bool,
+    t0: Instant,
+    pub registry: Registry,
+    trace: Mutex<TraceBuilder>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new(false)
+    }
+}
+
+impl Telemetry {
+    pub fn new(tracing: bool) -> Self {
+        Telemetry {
+            tracing,
+            t0: Instant::now(),
+            registry: Registry::new(),
+            trace: Mutex::new(TraceBuilder::new()),
+        }
+    }
+
+    pub fn disabled() -> Self {
+        Self::new(false)
+    }
+
+    pub fn tracing(&self) -> bool {
+        self.tracing
+    }
+
+    /// Microseconds since this domain was created (the wall-span timebase).
+    pub fn now_us(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Record a span (no-op unless tracing is enabled).
+    pub fn record(&self, ev: TraceEvent) {
+        if self.tracing {
+            self.trace.lock().unwrap().push(ev);
+        }
+    }
+
+    pub fn name_thread(&self, pid: u32, tid: u32, label: &str) {
+        if self.tracing {
+            self.trace.lock().unwrap().name_thread(pid, tid, label);
+        }
+    }
+
+    pub fn name_process(&self, pid: u32, label: &str) {
+        if self.tracing {
+            self.trace.lock().unwrap().name_process(pid, label);
+        }
+    }
+
+    /// Run `f`, recording it as a wall-time span when tracing is on.
+    pub fn wall_span<T>(&self, pid: u32, tid: u32, name: &str, cat: &str, f: impl FnOnce() -> T) -> T {
+        if !self.tracing {
+            return f();
+        }
+        let ts = self.now_us();
+        let r = f();
+        let dur = self.now_us() - ts;
+        self.record(TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            pid,
+            tid,
+            ts_us: ts,
+            dur_us: dur,
+            args: Vec::new(),
+        });
+        r
+    }
+
+    /// Fold another builder's spans into this domain's trace.
+    pub fn merge_trace(&self, b: TraceBuilder) {
+        self.trace.lock().unwrap().merge(b);
+    }
+
+    /// Take the collected spans out (leaves an empty builder behind).
+    pub fn take_trace(&self) -> TraceBuilder {
+        std::mem::take(&mut *self.trace.lock().unwrap())
+    }
+
+    pub fn export_chrome_json(&self) -> String {
+        self.trace.lock().unwrap().to_chrome_json()
+    }
+
+    pub fn render_metrics(&self) -> String {
+        self.registry.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_uses_ceil_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 99.0), 99.0); // rank ceil(99.0) = 99 -> index 98
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0); // rank clamps to 1
+    }
+
+    #[test]
+    fn percentile_small_samples_report_tail() {
+        // ceil-rank gives the max for any p99 with n <= 100 (a truncating
+        // `(len * 0.99) as usize` index drifts off the tail as n grows)
+        let v = [1.0, 2.0];
+        assert_eq!(percentile(&v, 99.0), 2.0);
+        let v = [7.0];
+        assert_eq!(percentile(&v, 99.0), 7.0);
+        let ten: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&ten, 99.0), 10.0);
+        assert!(percentile(&[], 99.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_unsorted_sorts() {
+        let mut v = [3.0, 1.0, 2.0];
+        assert_eq!(percentile_unsorted(&mut v, 100.0), 3.0);
+        assert_eq!(v[0], 1.0);
+    }
+
+    #[test]
+    fn wall_span_records_only_when_tracing() {
+        let off = Telemetry::disabled();
+        off.wall_span(COMPILER_PID, 0, "pass", "m", || ());
+        assert!(off.take_trace().is_empty());
+
+        let on = Telemetry::new(true);
+        let out = on.wall_span(COMPILER_PID, 0, "pass", "m", || 42);
+        assert_eq!(out, 42);
+        let tr = on.take_trace();
+        assert_eq!(tr.len(), 1);
+        assert_eq!(tr.events[0].name, "pass");
+        assert!(tr.events[0].dur_us >= 0.0);
+    }
+
+    #[test]
+    fn registry_is_always_live() {
+        let t = Telemetry::disabled();
+        t.registry.counter("c_total", "").inc();
+        assert!(t.render_metrics().contains("c_total 1"));
+    }
+}

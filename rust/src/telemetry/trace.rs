@@ -1,0 +1,341 @@
+//! Span/event tracing and the Chrome trace-event (Perfetto-loadable)
+//! exporter.
+//!
+//! Every span is a complete ("ph":"X") event on a `(pid, tid)` track:
+//!
+//! - pid [`SIM_PID`] — *simulated* time: one COMPUTE and one XFER track per
+//!   cluster, a `layers` track with one span per graph layer, and a `host`
+//!   track for the serial orchestration tail. Timestamps are cycle counts
+//!   converted to microseconds at the configured clock, so Perfetto's
+//!   measurements read directly in accelerator time.
+//! - pid [`COMPILER_PID`] — wall time of the compiler passes.
+//! - pid [`FRAME_PID`] — wall time of the frame-loop service
+//!   (capture / infer / record per frame).
+//!
+//! Open exports with <https://ui.perfetto.dev> ("Open trace file") or
+//! `chrome://tracing`. See `docs/OBSERVABILITY.md` for the span hierarchy.
+
+use super::json::{self, Json};
+
+/// Process id for simulated-time tracks.
+pub const SIM_PID: u32 = 1;
+/// Process id for compiler-pass wall-time tracks.
+pub const COMPILER_PID: u32 = 2;
+/// Process id for frame-loop wall-time tracks.
+pub const FRAME_PID: u32 = 3;
+
+/// A span argument value (rendered into the event's `args` object).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl ArgValue {
+    fn to_json(&self) -> String {
+        match self {
+            ArgValue::U64(v) => v.to_string(),
+            ArgValue::F64(v) => json::fmt_f64(*v),
+            ArgValue::Str(s) => format!("\"{}\"", json::escape(s)),
+        }
+    }
+}
+
+/// One complete span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Category; for sim instruction spans this is the owning layer's name.
+    pub cat: String,
+    pub pid: u32,
+    pub tid: u32,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    /// Sorted by key on insertion (keeps the export canonical).
+    pub args: Vec<(String, ArgValue)>,
+}
+
+/// Collects spans and track names; renders/parses the Chrome trace format.
+#[derive(Debug, Clone, Default)]
+pub struct TraceBuilder {
+    pub events: Vec<TraceEvent>,
+    thread_names: Vec<(u32, u32, String)>,
+    process_names: Vec<(u32, String)>,
+}
+
+impl TraceBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, mut ev: TraceEvent) {
+        ev.args.sort_by(|a, b| a.0.cmp(&b.0));
+        self.events.push(ev);
+    }
+
+    /// Convenience constructor for a complete span.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &mut self,
+        pid: u32,
+        tid: u32,
+        name: &str,
+        cat: &str,
+        ts_us: f64,
+        dur_us: f64,
+        args: Vec<(String, ArgValue)>,
+    ) {
+        self.push(TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            pid,
+            tid,
+            ts_us,
+            dur_us,
+            args,
+        });
+    }
+
+    pub fn name_thread(&mut self, pid: u32, tid: u32, label: &str) {
+        if !self.thread_names.iter().any(|(p, t, _)| *p == pid && *t == tid) {
+            self.thread_names.push((pid, tid, label.to_string()));
+        }
+    }
+
+    pub fn name_process(&mut self, pid: u32, label: &str) {
+        if !self.process_names.iter().any(|(p, _)| *p == pid) {
+            self.process_names.push((pid, label.to_string()));
+        }
+    }
+
+    /// Track label lookup (tests / report rendering).
+    pub fn thread_label(&self, pid: u32, tid: u32) -> Option<&str> {
+        self.thread_names
+            .iter()
+            .find(|(p, t, _)| *p == pid && *t == tid)
+            .map(|(_, _, l)| l.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Append another builder's spans and track names.
+    pub fn merge(&mut self, other: TraceBuilder) {
+        for (pid, label) in other.process_names {
+            self.name_process(pid, &label);
+        }
+        for (pid, tid, label) in other.thread_names {
+            self.name_thread(pid, tid, &label);
+        }
+        self.events.extend(other.events);
+    }
+
+    /// Re-home every track to `pid + delta` (used when several models share
+    /// one export so their timelines don't interleave on one process row).
+    pub fn shift_pid(&mut self, delta: u32) {
+        for ev in &mut self.events {
+            ev.pid += delta;
+        }
+        for n in &mut self.thread_names {
+            n.0 += delta;
+        }
+        for n in &mut self.process_names {
+            n.0 += delta;
+        }
+    }
+
+    /// Render the Chrome trace-event JSON object format.
+    pub fn to_chrome_json(&self) -> String {
+        let mut s = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        let mut sep = |s: &mut String| {
+            if first {
+                first = false;
+            } else {
+                s.push(',');
+            }
+            s.push('\n');
+        };
+        for (pid, label) in &self.process_names {
+            sep(&mut s);
+            s.push_str(&format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\"args\":{{\"name\":\"{}\"}}}}",
+                json::escape(label)
+            ));
+        }
+        for (pid, tid, label) in &self.thread_names {
+            sep(&mut s);
+            s.push_str(&format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\"args\":{{\"name\":\"{}\"}}}}",
+                json::escape(label)
+            ));
+        }
+        for ev in &self.events {
+            sep(&mut s);
+            let args = ev
+                .args
+                .iter()
+                .map(|(k, v)| format!("\"{}\":{}", json::escape(k), v.to_json()))
+                .collect::<Vec<_>>()
+                .join(",");
+            s.push_str(&format!(
+                "{{\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{},\"dur\":{},\"name\":\"{}\",\"cat\":\"{}\",\"args\":{{{args}}}}}",
+                ev.pid,
+                ev.tid,
+                json::fmt_f64(ev.ts_us),
+                json::fmt_f64(ev.dur_us),
+                json::escape(&ev.name),
+                json::escape(&ev.cat),
+            ));
+        }
+        s.push_str("\n]}");
+        s
+    }
+
+    /// Parse a Chrome trace-event export back (round-trip testing and
+    /// offline analysis of saved traces). Numeric args whose value is a
+    /// non-negative integer come back as [`ArgValue::U64`].
+    pub fn from_chrome_json(text: &str) -> crate::Result<TraceBuilder> {
+        let doc = Json::parse(text)?;
+        let events = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing traceEvents array"))?;
+        let mut out = TraceBuilder::new();
+        for ev in events {
+            let ph = ev.get("ph").and_then(Json::as_str).unwrap_or("");
+            let pid = ev.get("pid").and_then(Json::as_f64).unwrap_or(0.0) as u32;
+            let tid = ev.get("tid").and_then(Json::as_f64).unwrap_or(0.0) as u32;
+            let name = ev.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+            match ph {
+                "M" => {
+                    let label = ev
+                        .get("args")
+                        .and_then(|a| a.get("name"))
+                        .and_then(Json::as_str)
+                        .unwrap_or("");
+                    if name == "thread_name" {
+                        out.name_thread(pid, tid, label);
+                    } else if name == "process_name" {
+                        out.name_process(pid, label);
+                    }
+                }
+                "X" => {
+                    let mut args = Vec::new();
+                    if let Some(Json::Obj(m)) = ev.get("args") {
+                        for (k, v) in m {
+                            let av = match v {
+                                Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => {
+                                    ArgValue::U64(*n as u64)
+                                }
+                                Json::Num(n) => ArgValue::F64(*n),
+                                Json::Str(s) => ArgValue::Str(s.clone()),
+                                _ => continue,
+                            };
+                            args.push((k.clone(), av));
+                        }
+                    }
+                    out.push(TraceEvent {
+                        name,
+                        cat: ev.get("cat").and_then(Json::as_str).unwrap_or("").to_string(),
+                        pid,
+                        tid,
+                        ts_us: ev.get("ts").and_then(Json::as_f64).unwrap_or(0.0),
+                        dur_us: ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0),
+                        args,
+                    });
+                }
+                _ => anyhow::bail!("unexpected event phase {ph:?}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TraceBuilder {
+        let mut b = TraceBuilder::new();
+        b.name_process(SIM_PID, "sim:test");
+        b.name_thread(SIM_PID, 0, "cluster0/COMPUTE");
+        b.name_thread(SIM_PID, 1, "cluster0/XFER");
+        b.span(
+            SIM_PID,
+            0,
+            "conv.tile",
+            "conv0",
+            0.0,
+            12.5,
+            vec![("macs".into(), ArgValue::U64(4096))],
+        );
+        b.span(
+            SIM_PID,
+            1,
+            "dmpa.load",
+            "conv0",
+            0.5,
+            3.25,
+            vec![
+                ("bytes".into(), ArgValue::U64(1024)),
+                ("note".into(), ArgValue::Str("weights \"w0\"".into())),
+            ],
+        );
+        b
+    }
+
+    #[test]
+    fn chrome_json_roundtrips() {
+        let b = sample();
+        let text = b.to_chrome_json();
+        let back = TraceBuilder::from_chrome_json(&text).unwrap();
+        assert_eq!(b.events, back.events);
+        assert_eq!(back.thread_label(SIM_PID, 0), Some("cluster0/COMPUTE"));
+        assert_eq!(back.thread_label(SIM_PID, 1), Some("cluster0/XFER"));
+    }
+
+    #[test]
+    fn export_is_valid_json() {
+        let text = sample().to_chrome_json();
+        let doc = Json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 1 process meta + 2 thread metas + 2 spans
+        assert_eq!(events.len(), 5);
+    }
+
+    #[test]
+    fn merge_and_shift() {
+        let mut a = sample();
+        let mut b = sample();
+        b.shift_pid(10);
+        assert_eq!(b.events[0].pid, SIM_PID + 10);
+        a.merge(b);
+        assert_eq!(a.len(), 4);
+        assert!(a.thread_label(SIM_PID + 10, 0).is_some());
+    }
+
+    #[test]
+    fn args_are_sorted_on_push() {
+        let mut b = TraceBuilder::new();
+        b.span(
+            1,
+            0,
+            "x",
+            "",
+            0.0,
+            1.0,
+            vec![
+                ("zz".into(), ArgValue::U64(1)),
+                ("aa".into(), ArgValue::U64(2)),
+            ],
+        );
+        assert_eq!(b.events[0].args[0].0, "aa");
+    }
+}
