@@ -10,6 +10,11 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
+# The PPA gate is the regression the paper lives or dies by — run it by
+# name so a filtered `cargo test` configuration can never silently skip it.
+echo "== cargo test -q --test ppa_regression"
+cargo test -q --test ppa_regression
+
 if cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy -- -D warnings"
     cargo clippy --all-targets -- -D warnings

@@ -17,9 +17,13 @@
 //! The loop is instrumented end to end: every frame produces `capture` and
 //! `infer` wall-time spans (pid [`FRAME_PID`]), and the service publishes
 //! frame-loop metrics (`j3dai_frames_total`, `j3dai_inference_service_us`,
-//! `j3dai_capture_us`, `j3dai_queue_depth`, `j3dai_achieved_fps`) into the
-//! coordinator's [`Telemetry`] registry — [`RunStats`] is derived from
-//! those series, not from a private tally.
+//! `j3dai_capture_us`, `j3dai_queue_depth`, `j3dai_achieved_fps`) plus the
+//! energy series (`j3dai_energy_mj_total` and friends — see
+//! [`telemetry::energy`]) into the coordinator's [`Telemetry`] registry —
+//! [`RunStats`] is derived from those series, not from a private tally.
+//! The registry/trace pair is held behind an [`Arc`] so the live exporter
+//! (`j3dai serve --metrics-addr`, [`crate::telemetry::MetricsServer`]) can
+//! scrape it while frames flow.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -33,7 +37,9 @@ use crate::runtime::Runtime;
 use crate::sensor::PixelArray;
 use crate::sim::functional::Tensor;
 use crate::sim::{self, SimResult};
-use crate::telemetry::{self, ArgValue, Telemetry, TraceEvent, FRAME_PID, SERVICE_US_BUCKETS};
+use crate::telemetry::{
+    self, ArgValue, EnergyMetrics, Telemetry, TraceEvent, FRAME_PID, SERVICE_US_BUCKETS,
+};
 
 /// One processed frame.
 #[derive(Debug, Clone)]
@@ -82,7 +88,7 @@ pub struct Coordinator {
     runtime: Runtime,
     energy: EnergyModel,
     cfg: CoordinatorConfig,
-    telemetry: Telemetry,
+    telemetry: Arc<Telemetry>,
 }
 
 impl Coordinator {
@@ -96,13 +102,20 @@ impl Coordinator {
             runtime,
             energy: EnergyModel::fdsoi28(),
             cfg,
-            telemetry: Telemetry::new(true),
+            telemetry: Arc::new(Telemetry::new(true)),
         })
     }
 
     /// The service's telemetry domain (frame spans + frame-loop metrics).
     pub fn telemetry(&self) -> &Telemetry {
         &self.telemetry
+    }
+
+    /// Shared handle to the telemetry domain — hand this to a
+    /// [`crate::telemetry::MetricsServer`] so `/metrics` and `/trace.json`
+    /// stay live while the frame loop runs.
+    pub fn telemetry_handle(&self) -> Arc<Telemetry> {
+        Arc::clone(&self.telemetry)
     }
 
     /// Cycle-simulate the graph twin of an artifact model.
@@ -120,22 +133,11 @@ impl Coordinator {
             .ok_or_else(|| anyhow::anyhow!("model {name} not loaded"))?
             .clone();
         let simr = self.presimulate(name)?;
-        let energy_mj = self.energy.inference_mj(&simr.activity);
-        let modeled_power =
-            self.energy.power_mw(&simr.activity, self.cfg.target_fps.min(simr.max_fps));
-        run_frame_loop(
-            name,
-            entry.input_shape,
-            &self.cfg,
-            &self.telemetry,
-            simr.latency_ms,
-            energy_mj,
-            modeled_power,
-            |frame| {
-                let out = self.runtime.infer(name, frame)?;
-                Ok(argmax_class(&out, &entry.output_dims))
-            },
-        )
+        let (tel, em) = (&self.telemetry, &self.energy);
+        run_frame_loop(name, entry.input_shape, &self.cfg, tel, &simr, em, |frame| {
+            let out = self.runtime.infer(name, frame)?;
+            Ok(argmax_class(&out, &entry.output_dims))
+        })
     }
 
     pub fn model_names(&self) -> Vec<String> {
@@ -154,9 +156,7 @@ pub fn run_functional_loop(
 ) -> crate::Result<RunStats> {
     let simr = sim::simulate(g, &ccfg.arch)?;
     let energy = EnergyModel::fdsoi28();
-    let energy_mj = energy.inference_mj(&simr.activity);
-    let modeled_power = energy.power_mw(&simr.activity, ccfg.target_fps.min(simr.max_fps));
-    run_frame_loop(&g.name, g.input, ccfg, tel, simr.latency_ms, energy_mj, modeled_power, |frame| {
+    run_frame_loop(&g.name, g.input, ccfg, tel, &simr, &energy, |frame| {
         let out = sim::functional::run_final(g, frame);
         Ok(argmax_class(&out.data, &[out.shape.h, out.shape.w, out.shape.c]))
     })
@@ -164,19 +164,25 @@ pub fn run_functional_loop(
 
 /// The shared frame loop: paced sensor thread, bounded channel, per-frame
 /// spans and metrics, aggregation. `infer` classifies one frame (its wall
-/// time is the service-time metric).
-#[allow(clippy::too_many_arguments)]
+/// time is the service-time metric); `simr`/`em` supply the modeled
+/// latency/energy figures each processed frame accounts into the registry.
 fn run_frame_loop(
     model: &str,
     shape: Shape,
     ccfg: &CoordinatorConfig,
     tel: &Telemetry,
-    modeled_latency_ms: f64,
-    modeled_energy_mj: f64,
-    modeled_power_mw: f64,
+    simr: &SimResult,
+    em: &EnergyModel,
     mut infer: impl FnMut(&Tensor) -> crate::Result<usize>,
 ) -> crate::Result<RunStats> {
+    let modeled_latency_ms = simr.latency_ms;
+    let modeled_energy_mj = em.inference_mj(&simr.activity);
+    // energy gauges report the rate the loop is paced at, capped at what the
+    // modeled latency can sustain (the paper prints "-" above that rate)
+    let modeled_fps = ccfg.target_fps.min(simr.max_fps);
+    let modeled_power_mw = em.power_mw(&simr.activity, modeled_fps);
     let labels: &[(&str, &str)] = &[("model", model)];
+    let energy_metrics = EnergyMetrics::register(&tel.registry, model);
     let frames_total =
         tel.registry.counter_with("j3dai_frames_total", labels, "Frames fully processed");
     let service_hist = tel.registry.histogram_with(
@@ -269,6 +275,7 @@ fn run_frame_loop(
         });
         service_hist.observe(service_us);
         frames_total.inc();
+        energy_metrics.record_inference(em, &simr.activity, modeled_fps);
         records.push(FrameRecord {
             frame_idx: i,
             top_class,

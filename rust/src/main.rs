@@ -1,11 +1,14 @@
 //! j3dai CLI — the leader entrypoint.
 //!
 //! ```text
-//! j3dai serve  [--model NAME] [--fps N] [--frames N] [--trace-out F]   run the frame loop
+//! j3dai serve  [--model NAME] [--fps N] [--frames N] [--trace-out F]
+//!              [--metrics-addr HOST:PORT]             run the frame loop (+ live /metrics)
 //! j3dai sim    [--model mbv1|mbv2|seg|all] [--trace-out F]   cycle-simulate Table I workloads
 //! j3dai trace  [--model NAME] [--out trace.json]       traced sim -> Perfetto trace + layer table
+//! j3dai roofline [--model NAME]                        per-layer roofline (GOPS vs MACs/byte)
 //! j3dai metrics [--model NAME] [--frames N]            functional frame loop -> Prometheus text
 //! j3dai bench-telemetry [--out BENCH_telemetry.json]   tracing-overhead benchmark file
+//! j3dai bench-ppa [--out BENCH_ppa.json]               PPA regression file (energy/latency/TOPS/W)
 //! j3dai table1 | table2 | fig5 | fig6                  print a paper table/figure
 //! j3dai compile [--model ...]                          show mapping/schedule report
 //! j3dai list                                           list loaded artifacts
@@ -13,14 +16,19 @@
 //!
 //! (Hand-rolled argument parsing: the offline registry has no clap.)
 
+use anyhow::Context as _;
 use j3dai::config::ArchConfig;
 use j3dai::coordinator::{self, Coordinator, CoordinatorConfig};
 use j3dai::power::{area, EnergyModel};
-use j3dai::telemetry::Telemetry;
+use j3dai::telemetry::{MetricsServer, Telemetry};
 use j3dai::{compiler, models, report, runtime, sim};
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
 }
 
 /// Canonical model key: long-form names alias the paper keys.
@@ -40,6 +48,18 @@ fn paper_graph(key: &str) -> Option<j3dai::graph::Graph> {
         "seg" => Some(models::paper_seg()),
         other => models::artifact_graph(other),
     }
+}
+
+/// Resolve `--model` or fail with the full list of accepted names — the
+/// CLI's unknown-model path must say what *would* have worked.
+fn require_graph(key: &str) -> j3dai::Result<j3dai::graph::Graph> {
+    paper_graph(key).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown model {key:?}; accepted: mbv1 | mbv2 | seg (paper workloads) or an \
+             artifact key: {}",
+            models::ARTIFACT_NAMES.join(" | ")
+        )
+    })
 }
 
 fn main() {
@@ -64,6 +84,19 @@ fn run() -> j3dai::Result<()> {
                 &runtime::default_artifact_dir(),
                 CoordinatorConfig { target_fps: fps, frames, arch: cfg },
             )?;
+            // the exporter shares the coordinator's registry/trace, so
+            // /metrics and /trace.json are live while frames flow
+            let mut exporter = match flag(&args, "--metrics-addr") {
+                Some(addr) => {
+                    let srv = MetricsServer::spawn(&addr, coord.telemetry_handle())?;
+                    println!(
+                        "metrics endpoint: http://{0}/metrics  trace: http://{0}/trace.json",
+                        srv.addr()
+                    );
+                    Some(srv)
+                }
+                None => None,
+            };
             let stats = coord.run_model(&model)?;
             println!(
                 "{}: {} frames in {:.2}s — achieved {:.1} FPS (target {:.0})",
@@ -74,8 +107,17 @@ fn run() -> j3dai::Result<()> {
                 stats.mean_service_us, stats.p99_service_us, stats.modeled_latency_ms, stats.modeled_power_mw_at_fps, fps
             );
             if let Some(path) = flag(&args, "--trace-out") {
-                std::fs::write(&path, coord.telemetry().export_chrome_json())?;
+                std::fs::write(&path, coord.telemetry().export_chrome_json())
+                    .with_context(|| format!("cannot write trace to {path}"))?;
                 println!("frame-loop trace written to {path} (open in ui.perfetto.dev)");
+            }
+            if let Some(srv) = exporter.as_mut() {
+                if let Some(secs) = flag(&args, "--hold-secs").and_then(|v| v.parse::<f64>().ok())
+                {
+                    println!("holding the metrics endpoint open for {secs}s (ctrl-c to stop)");
+                    std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+                }
+                srv.shutdown();
             }
         }
         "sim" => {
@@ -88,7 +130,7 @@ fn run() -> j3dai::Result<()> {
             let trace_out = flag(&args, "--trace-out");
             let mut merged = j3dai::telemetry::TraceBuilder::new();
             for (mi, &key) in keys.iter().enumerate() {
-                let g = paper_graph(key).ok_or_else(|| anyhow::anyhow!("unknown model {key}"))?;
+                let g = require_graph(key)?;
                 let r = if trace_out.is_some() {
                     let (r, mut tr) = sim::simulate_traced(&g, &cfg)?;
                     // one process row per model so timelines don't interleave
@@ -117,19 +159,21 @@ fn run() -> j3dai::Result<()> {
                 }
             }
             if let Some(path) = trace_out {
-                std::fs::write(&path, merged.to_chrome_json())?;
+                std::fs::write(&path, merged.to_chrome_json())
+                    .with_context(|| format!("cannot write trace to {path}"))?;
                 println!("sim trace written to {path} (open in ui.perfetto.dev)");
             }
         }
         "trace" => {
             let key = flag(&args, "--model").unwrap_or_else(|| "mbv1".into());
             let out = flag(&args, "--out").unwrap_or_else(|| "trace.json".into());
-            let g = paper_graph(&key).ok_or_else(|| anyhow::anyhow!("unknown model {key}"))?;
+            let g = require_graph(&key)?;
             let tel = Telemetry::new(true);
             let c = compiler::compile_traced(&g, &cfg, Some(&tel))?;
             let (r, mut tr) = sim::simulate_compiled_traced(&g, &cfg, &c);
             tr.trace.merge(tel.take_trace()); // compiler-pass wall spans
-            std::fs::write(&out, tr.trace.to_chrome_json())?;
+            std::fs::write(&out, tr.trace.to_chrome_json())
+                .with_context(|| format!("cannot write trace to {out}"))?;
             print!("{}", report::render_layer_table(&tr));
             println!(
                 "\n{}: {:.2} ms/inference, MAC eff {:.1}% — {} spans written to {out}",
@@ -144,7 +188,7 @@ fn run() -> j3dai::Result<()> {
             let key = flag(&args, "--model").unwrap_or_else(|| "tinycnn_24x32".into());
             let frames: u64 = flag(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(30);
             let fps: f64 = flag(&args, "--fps").and_then(|v| v.parse().ok()).unwrap_or(1000.0);
-            let g = paper_graph(&key).ok_or_else(|| anyhow::anyhow!("unknown model {key}"))?;
+            let g = require_graph(&key)?;
             let tel = Telemetry::new(false); // metrics only; no span buffer
             let ccfg = CoordinatorConfig { target_fps: fps, frames, arch: cfg };
             let stats = coordinator::run_functional_loop(&g, &ccfg, &tel)?;
@@ -182,7 +226,53 @@ fn run() -> j3dai::Result<()> {
                 });
                 println!("benched {key}: {:.2} ms modeled latency", r.latency_ms);
             }
-            std::fs::write(&out, report::bench_telemetry_json(&entries))?;
+            std::fs::write(&out, report::bench_telemetry_json(&entries))
+                .with_context(|| format!("cannot write {out}"))?;
+            println!("wrote {out}");
+        }
+        "roofline" => {
+            if has_flag(&args, "--help") {
+                println!("j3dai roofline [--model mbv1|mbv2|seg|<artifact>]  (default: mbv1)");
+                println!();
+                println!("Per-layer roofline analysis of a traced simulation: arithmetic");
+                println!("intensity (MACs per off-cluster byte) against achieved GOPS, with");
+                println!("the attainable ceiling set by the peak MAC rate or the DMPA/DMA");
+                println!("bandwidth slope — memory-bound layers are flagged MEMORY.");
+                return Ok(());
+            }
+            let key = flag(&args, "--model").unwrap_or_else(|| "mbv1".into());
+            let g = require_graph(&key)?;
+            let (_, tr) = sim::simulate_traced(&g, &cfg)?;
+            print!("{}", report::render_roofline(&tr, &cfg));
+        }
+        "bench-ppa" => {
+            if has_flag(&args, "--help") {
+                println!("j3dai bench-ppa [--out BENCH_ppa.json]");
+                println!();
+                println!("Simulate the three Table I workloads (mbv1, mbv2, seg) and write");
+                println!("the machine-readable PPA file: per-model energy (mJ), latency,");
+                println!("power @30/@200 FPS, TOPS/W and MAC efficiency, plus the arch");
+                println!("header (peak GOPS, die area). tests/ppa_regression.rs gates this");
+                println!("file against the paper's Table I within tolerance.");
+                return Ok(());
+            }
+            let out = flag(&args, "--out").unwrap_or_else(|| "BENCH_ppa.json".into());
+            let mut entries = Vec::new();
+            for key in ["mbv1", "mbv2", "seg"] {
+                let g = require_graph(key)?;
+                let r = sim::simulate(&g, &cfg)?;
+                println!(
+                    "{:<14} {:.2} ms  {:.3} mJ/inf  P@30 {}  eff {:.1}%",
+                    r.model,
+                    r.latency_ms,
+                    em.inference_mj(&r.activity),
+                    r.power_mw(&em, 30.0).map(|p| format!("{p:.1} mW")).unwrap_or("-".into()),
+                    r.mac_efficiency * 100.0
+                );
+                entries.push(report::ppa_entry(&r, &em));
+            }
+            std::fs::write(&out, report::bench_ppa_json(&cfg, &entries))
+                .with_context(|| format!("cannot write {out}"))?;
             println!("wrote {out}");
         }
         "table1" => {
@@ -258,14 +348,23 @@ fn run() -> j3dai::Result<()> {
                 println!("{:<20} input {} -> output {:?}", e.name, e.input_shape, e.output_dims);
             }
         }
-        _ => {
-            println!("j3dai — J3DAI (ISLPED'25) digital-system reproduction");
-            println!(
-                "commands: serve | sim | trace | metrics | bench-telemetry | table1 | table2 | fig5 | fig6 | compile | list"
-            );
+        "help" | "--help" | "-h" => print_help(),
+        other => {
+            print_help();
+            anyhow::bail!("unknown command {other:?}");
         }
     }
     Ok(())
+}
+
+fn print_help() {
+    println!("j3dai — J3DAI (ISLPED'25) digital-system reproduction");
+    println!(
+        "commands: serve | sim | trace | roofline | metrics | bench-telemetry | bench-ppa | \
+         table1 | table2 | fig5 | fig6 | compile | list"
+    );
+    println!("  serve --metrics-addr HOST:PORT exposes live /metrics and /trace.json");
+    println!("  roofline --help / bench-ppa --help print per-command usage");
 }
 
 // (dev helper kept out of the help text: `j3dai tiles` prints per-model

@@ -147,6 +147,12 @@ pub fn paper_seg() -> Graph {
     fpn_seg(1, 2, Shape::new(384, 512, 3), 19)
 }
 
+/// The AOT artifact registry keys [`artifact_graph`] accepts (mirrors
+/// `python/compile/model.py::MODELS`) — the CLI uses this to print a
+/// helpful list on an unknown `--model`.
+pub const ARTIFACT_NAMES: [&str; 4] =
+    ["tinycnn_24x32", "mbv1_w25_48x64", "mbv2_w25_48x64", "fpnseg_w25_48x64"];
+
 /// Reduced-scale builders matching the AOT artifact registry
 /// (`python/compile/model.py::MODELS`).
 pub fn artifact_graph(name: &str) -> Option<Graph> {
@@ -162,6 +168,14 @@ pub fn artifact_graph(name: &str) -> Option<Graph> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn artifact_names_all_resolve() {
+        for n in ARTIFACT_NAMES {
+            assert!(artifact_graph(n).is_some(), "{n}");
+        }
+        assert!(artifact_graph("nope").is_none());
+    }
 
     #[test]
     fn paper_mbv1_mac_count() {

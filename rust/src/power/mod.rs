@@ -41,15 +41,32 @@ pub struct Activity {
 }
 
 impl Activity {
-    pub fn merge(&mut self, o: &Activity) {
+    /// Sum every event counter except `cycles`.
+    fn merge_events(&mut self, o: &Activity) {
         self.macs += o.macs;
-        self.cycles = self.cycles.max(o.cycles);
         self.local_sram_bytes += o.local_sram_bytes;
         self.dmpa_bytes += o.dmpa_bytes;
         self.dma_bytes += o.dma_bytes;
         self.tsv_bytes += o.tsv_bytes;
         self.alu_ops += o.alu_ops;
         self.busy_cluster_cycles += o.busy_cluster_cycles;
+    }
+
+    /// Merge activity from a unit running *concurrently* with this one
+    /// (clusters within one inference): event counts add, the critical
+    /// path is the slower of the two.
+    pub fn merge_parallel(&mut self, o: &Activity) {
+        self.merge_events(o);
+        self.cycles = self.cycles.max(o.cycles);
+    }
+
+    /// Merge activity from work running *after* this one (frame after
+    /// frame, instruction after instruction): everything adds, cycles
+    /// included. The old single `merge` used `max` for cycles, which
+    /// silently under-reported sequential accumulation.
+    pub fn merge_sequential(&mut self, o: &Activity) {
+        self.merge_events(o);
+        self.cycles += o.cycles;
     }
 }
 
@@ -122,15 +139,28 @@ impl EnergyModel {
         pj * 1e-9
     }
 
-    /// Average power in mW at a given frame rate.
+    /// Average power in mW at a given frame rate. A non-positive or
+    /// non-finite `fps` means "no frames": static power only, never
+    /// a negative or NaN wattage.
     pub fn power_mw(&self, a: &Activity, fps: f64) -> f64 {
+        if !fps.is_finite() || fps <= 0.0 {
+            return self.static_mw;
+        }
         self.inference_mj(a) * fps + self.static_mw
     }
 
     /// TOPS/W at a frame rate (1 MAC = 2 ops), the Table I metric.
+    /// Zero when idle (`fps <= 0`) or when the power model degenerates to
+    /// zero watts — never `inf`/NaN from a division by zero.
     pub fn tops_per_watt(&self, a: &Activity, fps: f64) -> f64 {
+        if !fps.is_finite() || fps <= 0.0 {
+            return 0.0;
+        }
         let ops_per_s = a.macs as f64 * 2.0 * fps;
         let watts = self.power_mw(a, fps) * 1e-3;
+        if watts <= 0.0 {
+            return 0.0;
+        }
         ops_per_s / watts / 1e12
     }
 }
@@ -204,11 +234,35 @@ mod tests {
     }
 
     #[test]
-    fn merge_accumulates() {
+    fn merge_parallel_takes_critical_path() {
         let mut a = mbv1_like();
         let b = mbv1_like();
-        a.merge(&b);
+        a.merge_parallel(&b);
         assert_eq!(a.macs, 2 * 557_000_000);
-        assert_eq!(a.cycles, 992_000); // max, not sum
+        assert_eq!(a.cycles, 992_000); // max: concurrent clusters
+        assert_eq!(a.busy_cluster_cycles, 2 * 5_500_000);
+    }
+
+    #[test]
+    fn merge_sequential_accumulates_cycles() {
+        let mut a = mbv1_like();
+        let b = mbv1_like();
+        a.merge_sequential(&b);
+        assert_eq!(a.macs, 2 * 557_000_000);
+        assert_eq!(a.cycles, 2 * 992_000); // sum: frame after frame
+    }
+
+    #[test]
+    fn idle_fps_never_produces_inf_or_nan() {
+        let em = EnergyModel::fdsoi28();
+        let a = mbv1_like();
+        for fps in [0.0, -1.0, f64::NAN, f64::NEG_INFINITY] {
+            assert_eq!(em.power_mw(&a, fps), em.static_mw, "fps={fps}");
+            assert_eq!(em.tops_per_watt(&a, fps), 0.0, "fps={fps}");
+        }
+        // even a zero-static model must not divide by zero
+        let free = EnergyModel { static_mw: 0.0, ..em };
+        let t = free.tops_per_watt(&Activity::default(), 30.0);
+        assert!(t.is_finite(), "t={t}");
     }
 }

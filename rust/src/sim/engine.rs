@@ -78,6 +78,12 @@ pub struct InstrSpan {
     pub macs: u64,
     /// Owning graph layer, from the preceding `layer.mark` (u32::MAX if none).
     pub layer: u32,
+    /// Event-count delta of exactly this instruction — the energy model
+    /// turns it into per-span joules. `cycles` is the span duration;
+    /// `busy_cluster_cycles` counts compute-engine occupancy only (the
+    /// controller/AGU/clock-tree energy is attributed to the compute
+    /// timeline — see `telemetry::energy`).
+    pub activity: Activity,
 }
 
 /// Where the traced engine delivers spans. `ENABLED` is a compile-time
@@ -133,33 +139,58 @@ fn run_cluster_impl<S: SpanSink>(
             _ if i.engine() == crate::isa::Engine::Xfer => {
                 let is_dma = matches!(i, Instr::DmaLoad { .. } | Instr::DmaStore { .. });
                 let dur = xfer_cycles(cfg, i) * if is_dma { dma_penalty } else { 1 };
+                let bytes = i.xfer_bytes();
+                // per-instruction delta: the span carries it so the energy
+                // model can attribute joules span-by-span
+                let mut d = Activity { cycles: dur, ..Activity::default() };
+                if is_dma {
+                    d.dma_bytes = bytes;
+                } else {
+                    d.dmpa_bytes = bytes;
+                }
+                if i.crosses_tsv() {
+                    d.tsv_bytes = bytes;
+                }
+                // every transferred byte lands in / leaves an NCB SRAM bank
+                d.local_sram_bytes = bytes;
                 if S::ENABLED {
                     sink.record(InstrSpan {
                         label: i.mnemonic(),
                         engine: crate::isa::Engine::Xfer,
                         start: xfer_t,
                         end: xfer_t + dur,
-                        bytes: i.xfer_bytes(),
+                        bytes,
                         macs: 0,
                         layer: cur_layer,
+                        activity: d,
                     });
                 }
                 xfer_t += dur;
                 xfer_busy += dur;
-                let bytes = i.xfer_bytes();
-                if is_dma {
-                    act.dma_bytes += bytes;
-                } else {
-                    act.dmpa_bytes += bytes;
-                }
-                if i.crosses_tsv() {
-                    act.tsv_bytes += bytes;
-                }
-                // every transferred byte lands in / leaves an NCB SRAM bank
-                act.local_sram_bytes += bytes;
+                act.merge_sequential(&d);
             }
             _ => {
                 let dur = compute_cycles(cfg, i);
+                let mut d = Activity {
+                    cycles: dur,
+                    busy_cluster_cycles: dur,
+                    macs: i.macs(),
+                    ..Activity::default()
+                };
+                match i {
+                    Instr::AddTile { n } => d.alu_ops = *n as u64,
+                    Instr::ActTile { n, .. } => d.alu_ops = *n as u64,
+                    Instr::PoolTile { h, w, c } => d.alu_ops = *h as u64 * *w as u64 * *c as u64,
+                    Instr::ConvTile { m, k, n, .. } => {
+                        // operand reads from NCB SRAM: act row + weight col per MAC
+                        // (banked SRAM services the SIMD lanes in parallel)
+                        d.local_sram_bytes = *m as u64 * *k as u64 + *k as u64 * *n as u64;
+                    }
+                    Instr::DwTile { h, w, c, .. } => {
+                        d.local_sram_bytes = *h as u64 * *w as u64 * *c as u64 * 2;
+                    }
+                    _ => {}
+                }
                 if S::ENABLED && dur > 0 {
                     sink.record(InstrSpan {
                         label: i.mnemonic(),
@@ -169,25 +200,12 @@ fn run_cluster_impl<S: SpanSink>(
                         bytes: 0,
                         macs: i.macs(),
                         layer: cur_layer,
+                        activity: d,
                     });
                 }
                 comp_t += dur;
                 compute_busy += dur;
-                act.macs += i.macs();
-                match i {
-                    Instr::AddTile { n } => act.alu_ops += *n as u64,
-                    Instr::ActTile { n, .. } => act.alu_ops += *n as u64,
-                    Instr::PoolTile { h, w, c } => act.alu_ops += *h as u64 * *w as u64 * *c as u64,
-                    Instr::ConvTile { m, k, n, .. } => {
-                        // operand reads from NCB SRAM: act row + weight col per MAC
-                        // (banked SRAM services the SIMD lanes in parallel)
-                        act.local_sram_bytes += *m as u64 * *k as u64 + *k as u64 * *n as u64;
-                    }
-                    Instr::DwTile { h, w, c, .. } => {
-                        act.local_sram_bytes += *h as u64 * *w as u64 * *c as u64 * 2;
-                    }
-                    _ => {}
-                }
+                act.merge_sequential(&d);
             }
         }
     }
@@ -379,6 +397,26 @@ mod tests {
                 last_end = s.end;
             }
         }
+    }
+
+    #[test]
+    fn span_activity_deltas_sum_to_run_activity() {
+        let c = cfg();
+        let prog = two_tile_program();
+        let (run, spans) = run_cluster_traced(&c, &prog, 1);
+        let mut acc = Activity::default();
+        for s in &spans {
+            acc.merge_sequential(&s.activity);
+        }
+        assert_eq!(acc.macs, run.activity.macs);
+        assert_eq!(acc.local_sram_bytes, run.activity.local_sram_bytes);
+        assert_eq!(acc.dmpa_bytes, run.activity.dmpa_bytes);
+        assert_eq!(acc.dma_bytes, run.activity.dma_bytes);
+        assert_eq!(acc.tsv_bytes, run.activity.tsv_bytes);
+        assert_eq!(acc.alu_ops, run.activity.alu_ops);
+        // controller energy rides the compute timeline: per-span busy
+        // cycles sum to the compute engine's occupancy, not the cluster max
+        assert_eq!(acc.busy_cluster_cycles, run.compute_busy);
     }
 
     #[test]

@@ -24,4 +24,7 @@ pub mod pe;
 pub mod system;
 
 pub use engine::{run_cluster_traced, ClusterRun, InstrSpan};
-pub use system::{simulate, simulate_traced, LayerStats, SimResult, SimTrace};
+pub use system::{
+    simulate, simulate_compiled, simulate_compiled_traced, simulate_traced, LayerStats, SimResult,
+    SimTrace,
+};

@@ -1,0 +1,239 @@
+//! Energy attribution — turns [`Activity`] event counts into joules and
+//! publishes them as metrics, per model and per component.
+//!
+//! The span tracer knows *where the cycles go*; this module adds *where
+//! the joules go*. Every [`crate::sim::InstrSpan`] carries the Activity
+//! delta of exactly one instruction, so a span's energy is the
+//! [`EnergyModel`] dot product over that delta ([`span_energy_pj`]); layer
+//! and inference totals are the same product over the aggregated Activity
+//! ([`EnergyBreakdown`]).
+//!
+//! **Attribution convention:** the controller/AGU/clock-tree component
+//! (`pj_per_busy_cluster_cycle`) tracks the *compute-engine* timeline —
+//! transfer spans carry zero busy cycles. Per-span/per-layer energies are
+//! therefore an attribution view that can slightly under-count the
+//! inference total whenever a cluster's transfer engine outruns its
+//! compute engine (the cluster-level busy figure is `max(compute, xfer)`).
+//! Totals published from the system-level Activity stay authoritative.
+//! Static/leakage power is a chip-level property and is never attributed
+//! to spans; it enters only through [`EnergyModel::power_mw`].
+
+use super::metrics::{FCounter, Gauge, Registry};
+use crate::power::{Activity, EnergyModel};
+
+/// Energy-component labels, in the order [`EnergyBreakdown::components`]
+/// reports them.
+pub const COMPONENTS: [&str; 7] = ["mac", "sram", "dmpa", "dma", "tsv", "alu", "ctrl"];
+
+/// One inference's energy split by architectural component, millijoules.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// PE MAC array.
+    pub mac_mj: f64,
+    /// NCB-local SRAM banks.
+    pub sram_mj: f64,
+    /// DMPA column connect (incl. its L2 accesses).
+    pub dmpa_mj: f64,
+    /// 64-bit system-interconnect DMA (incl. its L2 accesses).
+    pub dma_mj: f64,
+    /// HD-TSV crossings (adder on top of the L2 access).
+    pub tsv_mj: f64,
+    /// Elementwise ALU / NLU ops.
+    pub alu_mj: f64,
+    /// Controller + AGU/AIU + clock distribution (busy cluster-cycles).
+    pub ctrl_mj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Split an Activity profile into per-component millijoules.
+    pub fn from_activity(em: &EnergyModel, a: &Activity) -> Self {
+        let mj = |pj_per: f64, n: u64| pj_per * n as f64 * 1e-9;
+        EnergyBreakdown {
+            mac_mj: mj(em.pj_per_mac, a.macs),
+            sram_mj: mj(em.pj_per_sram_byte, a.local_sram_bytes),
+            dmpa_mj: mj(em.pj_per_dmpa_byte, a.dmpa_bytes),
+            dma_mj: mj(em.pj_per_dma_byte, a.dma_bytes),
+            tsv_mj: mj(em.pj_per_tsv_byte, a.tsv_bytes),
+            alu_mj: mj(em.pj_per_alu_op, a.alu_ops),
+            ctrl_mj: mj(em.pj_per_busy_cluster_cycle, a.busy_cluster_cycles),
+        }
+    }
+
+    /// Total dynamic energy, millijoules. Equals
+    /// [`EnergyModel::inference_mj`] on the same Activity.
+    pub fn total_mj(&self) -> f64 {
+        self.mac_mj
+            + self.sram_mj
+            + self.dmpa_mj
+            + self.dma_mj
+            + self.tsv_mj
+            + self.alu_mj
+            + self.ctrl_mj
+    }
+
+    /// `(component label, mJ)` pairs, in [`COMPONENTS`] order.
+    pub fn components(&self) -> [(&'static str, f64); 7] {
+        [
+            ("mac", self.mac_mj),
+            ("sram", self.sram_mj),
+            ("dmpa", self.dmpa_mj),
+            ("dma", self.dma_mj),
+            ("tsv", self.tsv_mj),
+            ("alu", self.alu_mj),
+            ("ctrl", self.ctrl_mj),
+        ]
+    }
+}
+
+/// Dynamic energy of one span/Activity delta in **picojoules** (the unit
+/// Perfetto span args use — layer energies land in the 10^4..10^8 pJ range
+/// where mJ would print as 0.000).
+pub fn span_energy_pj(em: &EnergyModel, a: &Activity) -> f64 {
+    EnergyBreakdown::from_activity(em, a).total_mj() * 1e9
+}
+
+/// Arithmetic intensity in MACs per byte of *off-cluster* traffic
+/// (DMPA + DMA bytes — the roofline's bandwidth axis). Zero-traffic
+/// activities report 0 rather than inf.
+pub fn arithmetic_intensity(a: &Activity) -> f64 {
+    let bytes = a.dmpa_bytes + a.dma_bytes;
+    if bytes == 0 {
+        return 0.0;
+    }
+    a.macs as f64 / bytes as f64
+}
+
+/// Handle bundle for one model's energy series in a [`Registry`]:
+/// `j3dai_energy_mj_total`, per-component `j3dai_energy_component_mj_total`,
+/// and the `j3dai_power_mw` / `j3dai_tops_per_watt` /
+/// `j3dai_arith_intensity_macs_per_byte` gauges.
+pub struct EnergyMetrics {
+    total_mj: FCounter,
+    components: Vec<(&'static str, FCounter)>,
+    power_mw: Gauge,
+    tops_per_watt: Gauge,
+    intensity: Gauge,
+}
+
+impl EnergyMetrics {
+    /// Get-or-create the energy series for `model`.
+    pub fn register(reg: &Registry, model: &str) -> Self {
+        let labels: &[(&str, &str)] = &[("model", model)];
+        let total_mj = reg.fcounter_with(
+            "j3dai_energy_mj_total",
+            labels,
+            "Modeled accelerator energy spent on inferences (mJ)",
+        );
+        let components = COMPONENTS
+            .iter()
+            .map(|c| {
+                (
+                    *c,
+                    reg.fcounter_with(
+                        "j3dai_energy_component_mj_total",
+                        &[("model", model), ("component", c)],
+                        "Modeled energy split by architectural component (mJ)",
+                    ),
+                )
+            })
+            .collect();
+        EnergyMetrics {
+            total_mj,
+            components,
+            power_mw: reg.gauge_with(
+                "j3dai_power_mw",
+                labels,
+                "Modeled average accelerator power at the served frame rate (mW)",
+            ),
+            tops_per_watt: reg.gauge_with(
+                "j3dai_tops_per_watt",
+                labels,
+                "Modeled power efficiency at the served frame rate (TOPS/W)",
+            ),
+            intensity: reg.gauge_with(
+                "j3dai_arith_intensity_macs_per_byte",
+                labels,
+                "Arithmetic intensity of the model (MACs per off-cluster byte)",
+            ),
+        }
+    }
+
+    /// Account one completed inference: bump the energy counters and
+    /// refresh the power/efficiency gauges at frame rate `fps`.
+    pub fn record_inference(&self, em: &EnergyModel, a: &Activity, fps: f64) {
+        let b = EnergyBreakdown::from_activity(em, a);
+        self.total_mj.add(b.total_mj());
+        for ((_, handle), (_, mj)) in self.components.iter().zip(b.components()) {
+            handle.add(mj);
+        }
+        self.power_mw.set(em.power_mw(a, fps));
+        self.tops_per_watt.set(em.tops_per_watt(a, fps));
+        self.intensity.set(arithmetic_intensity(a));
+    }
+
+    /// Total mJ accounted so far (test/report hook).
+    pub fn total_mj(&self) -> f64 {
+        self.total_mj.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn activity() -> Activity {
+        Activity {
+            macs: 1_000_000,
+            cycles: 10_000,
+            local_sram_bytes: 400_000,
+            dmpa_bytes: 50_000,
+            dma_bytes: 2_000,
+            tsv_bytes: 10_000,
+            alu_ops: 30_000,
+            busy_cluster_cycles: 60_000,
+        }
+    }
+
+    #[test]
+    fn breakdown_matches_inference_mj() {
+        let em = EnergyModel::fdsoi28();
+        let a = activity();
+        let b = EnergyBreakdown::from_activity(&em, &a);
+        assert!((b.total_mj() - em.inference_mj(&a)).abs() < 1e-12);
+        assert!(b.components().iter().all(|(_, mj)| *mj > 0.0));
+        assert!((span_energy_pj(&em, &a) - b.total_mj() * 1e9).abs() < 1e-3);
+    }
+
+    #[test]
+    fn intensity_guards_zero_traffic() {
+        assert_eq!(arithmetic_intensity(&Activity::default()), 0.0);
+        let a = activity();
+        let ai = arithmetic_intensity(&a);
+        assert!((ai - 1_000_000.0 / 52_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_accumulate_and_render() {
+        let reg = Registry::new();
+        let em = EnergyModel::fdsoi28();
+        let a = activity();
+        let m = EnergyMetrics::register(&reg, "mbv1");
+        m.record_inference(&em, &a, 30.0);
+        m.record_inference(&em, &a, 30.0);
+        let per_frame = em.inference_mj(&a);
+        assert!((m.total_mj() - 2.0 * per_frame).abs() < 1e-9);
+
+        let text = reg.render();
+        assert!(text.contains("j3dai_energy_mj_total{model=\"mbv1\"}"), "{text}");
+        assert!(
+            text.contains("j3dai_energy_component_mj_total{component=\"mac\",model=\"mbv1\"}")
+                || text.contains("j3dai_energy_component_mj_total{model=\"mbv1\",component=\"mac\"}"),
+            "{text}"
+        );
+        assert!(text.contains("j3dai_power_mw{model=\"mbv1\"}"));
+        assert!(text.contains("j3dai_tops_per_watt{model=\"mbv1\"}"));
+        // re-registering returns the same series
+        let m2 = EnergyMetrics::register(&reg, "mbv1");
+        assert_eq!(m2.total_mj(), m.total_mj());
+    }
+}

@@ -1,0 +1,184 @@
+//! Minimal blocking HTTP exporter — serves the live metrics registry as
+//! Prometheus text at `/metrics` and the current span buffer as a Chrome
+//! trace at `/trace.json`, from `std::net` only (the offline registry has
+//! no hyper/tokio).
+//!
+//! One accept loop on a background thread, one request per connection
+//! (`Connection: close`). This is scrape-grade, not serving-grade: a
+//! Prometheus poll every few seconds and the occasional Perfetto snapshot,
+//! while the frame loop keeps running — the hot path never touches the
+//! listener. Start it with `j3dai serve --metrics-addr 127.0.0.1:9090`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::Telemetry;
+
+/// Routes served by the exporter (also the `/` index body).
+const ROUTES: &str = "/metrics (Prometheus text)\n/trace.json (Chrome trace event JSON)\n/healthz\n";
+
+/// Handle to a running exporter; dropping it stops the accept loop.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9090`, port 0 for ephemeral) and serve
+    /// `tel`'s registry and trace until [`MetricsServer::shutdown`]/drop.
+    pub fn spawn(addr: &str, tel: Arc<Telemetry>) -> crate::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind metrics endpoint {addr}: {e}"))?;
+        // non-blocking accept so the loop can observe the stop flag without
+        // needing a wake-up connection
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_seen = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("j3dai-metrics-http".into())
+            .spawn(move || {
+                while !stop_seen.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let _ = serve_connection(stream, &tel);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the thread (idempotent).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Read one request line, drain the headers, write one response.
+fn serve_connection(stream: TcpStream, tel: &Telemetry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let path = request_line.split_whitespace().nth(1).unwrap_or("/").to_string();
+    // drain headers until the blank line (best effort — we never read a body)
+    let mut header = String::new();
+    loop {
+        header.clear();
+        match reader.read_line(&mut header) {
+            Ok(0) | Err(_) => break,
+            Ok(_) if header == "\r\n" || header == "\n" => break,
+            Ok(_) => {}
+        }
+    }
+    let (status, ctype, body) = route(&path, tel);
+    respond(stream, status, ctype, &body)
+}
+
+fn route(path: &str, tel: &Telemetry) -> (&'static str, &'static str, String) {
+    match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            tel.render_metrics(),
+        ),
+        "/trace.json" => ("200 OK", "application/json", tel.export_chrome_json()),
+        "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
+        "/" => ("200 OK", "text/plain; charset=utf-8", ROUTES.to_string()),
+        other => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            format!("no route {other}; try:\n{ROUTES}"),
+        ),
+    }
+}
+
+fn respond(mut stream: TcpStream, status: &str, ctype: &str, body: &str) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    /// Plain-TcpStream HTTP GET against the exporter, returning
+    /// (status line, body).
+    pub fn get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+        let mut text = String::new();
+        s.read_to_string(&mut text).unwrap();
+        let status = text.lines().next().unwrap_or("").to_string();
+        let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    #[test]
+    fn serves_metrics_trace_and_404() {
+        let tel = Arc::new(Telemetry::new(true));
+        tel.registry.counter("http_test_total", "").add(3);
+        tel.record(crate::telemetry::TraceEvent {
+            name: "probe".into(),
+            cat: "test".into(),
+            pid: 1,
+            tid: 0,
+            ts_us: 0.0,
+            dur_us: 1.0,
+            args: Vec::new(),
+        });
+        let mut srv = MetricsServer::spawn("127.0.0.1:0", Arc::clone(&tel)).unwrap();
+        let addr = srv.addr();
+
+        let (status, body) = get(addr, "/metrics");
+        assert!(status.contains("200"), "{status}");
+        assert!(body.contains("http_test_total 3"), "{body}");
+
+        let (status, body) = get(addr, "/trace.json");
+        assert!(status.contains("200"), "{status}");
+        let doc = crate::telemetry::json::Json::parse(&body).unwrap();
+        assert!(doc.get("traceEvents").is_some());
+
+        let (status, _) = get(addr, "/healthz");
+        assert!(status.contains("200"));
+        let (status, body) = get(addr, "/nope");
+        assert!(status.contains("404"), "{status}");
+        assert!(body.contains("/metrics"));
+
+        srv.shutdown();
+        // after shutdown the port stops accepting (bind may be reused, but
+        // the old listener is gone — a fresh connect must fail or hang up)
+        assert!(TcpStream::connect_timeout(&addr, Duration::from_millis(200)).is_err());
+    }
+}

@@ -37,6 +37,41 @@ impl Counter {
     }
 }
 
+/// Monotonically increasing **float** counter (f64 bits, CAS-updated) —
+/// for physical quantities that accumulate in fractional units, e.g.
+/// millijoules of modeled energy. Counter semantics for Prometheus
+/// (rendered with `# TYPE ... counter`).
+#[derive(Clone)]
+pub struct FCounter(Arc<AtomicU64>);
+
+impl Default for FCounter {
+    fn default() -> Self {
+        FCounter(Arc::new(AtomicU64::new(0f64.to_bits())))
+    }
+}
+
+impl FCounter {
+    /// Add `v` (negative or non-finite increments are ignored — counters
+    /// only go up).
+    pub fn add(&self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
 /// Last-write-wins gauge (stored as f64 bits).
 #[derive(Clone, Default)]
 pub struct Gauge(Arc<AtomicU64>);
@@ -112,10 +147,34 @@ impl Histogram {
             self.sum() / n as f64
         }
     }
+
+    /// Coarse quantile from the bucket counts, nearest-rank with the same
+    /// ceil-based rank as [`super::percentile`]: returns the **upper bound**
+    /// of the bucket holding the ranked sample. `None` when the histogram
+    /// is empty; a rank landing in the `+Inf` bucket reports the largest
+    /// finite bound (a lower-bound estimate — callers needing the exact
+    /// tail must keep raw samples).
+    pub fn quantile(&self, p: f64) -> Option<f64> {
+        let c = &self.0;
+        let n = c.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return None;
+        }
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, b) in c.bounds.iter().enumerate() {
+            cum += c.counts[i].load(Ordering::Relaxed);
+            if cum >= rank {
+                return Some(*b);
+            }
+        }
+        c.bounds.last().copied()
+    }
 }
 
 enum Metric {
     Counter(Counter),
+    FCounter(FCounter),
     Gauge(Gauge),
     Histogram(Histogram),
 }
@@ -123,7 +182,7 @@ enum Metric {
 impl Metric {
     fn type_name(&self) -> &'static str {
         match self {
-            Metric::Counter(_) => "counter",
+            Metric::Counter(_) | Metric::FCounter(_) => "counter",
             Metric::Gauge(_) => "gauge",
             Metric::Histogram(_) => "histogram",
         }
@@ -189,6 +248,26 @@ impl Registry {
         }
     }
 
+    pub fn fcounter(&self, name: &str, help: &str) -> FCounter {
+        self.fcounter_with(name, &[], help)
+    }
+
+    pub fn fcounter_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> FCounter {
+        let ls = label_str(labels);
+        let key = series(name, &ls, None);
+        let mut m = self.entries.lock().unwrap();
+        let e = m.entry(key).or_insert_with(|| Entry {
+            base: name.to_string(),
+            labels: ls,
+            help: help.to_string(),
+            metric: Metric::FCounter(FCounter::default()),
+        });
+        match &e.metric {
+            Metric::FCounter(c) => c.clone(),
+            other => panic!("metric {name} already registered as {}", other.type_name()),
+        }
+    }
+
     pub fn gauge(&self, name: &str, help: &str) -> Gauge {
         self.gauge_with(name, &[], help)
     }
@@ -235,6 +314,11 @@ impl Registry {
         }
     }
 
+    /// Number of registered series (test/introspection hook).
+    pub fn series_count(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
     /// Render the Prometheus text exposition format (spec v0.0.4).
     pub fn render(&self) -> String {
         let m = self.entries.lock().unwrap();
@@ -251,6 +335,13 @@ impl Registry {
             match &e.metric {
                 Metric::Counter(c) => {
                     out.push_str(&format!("{} {}\n", series(&e.base, &e.labels, None), c.get()));
+                }
+                Metric::FCounter(c) => {
+                    out.push_str(&format!(
+                        "{} {}\n",
+                        series(&e.base, &e.labels, None),
+                        json::fmt_f64(c.get())
+                    ));
                 }
                 Metric::Gauge(g) => {
                     out.push_str(&format!(
@@ -293,6 +384,33 @@ impl Registry {
         }
         out
     }
+}
+
+/// Parse Prometheus text exposition back into `series -> value` pairs
+/// (`# HELP`/`# TYPE` lines are skipped). This is the consumer half of the
+/// round-trip guarantee: whatever [`Registry::render`] emits — including
+/// what the `/metrics` HTTP endpoint serves — re-parses to the same
+/// numbers. Series names keep their label block verbatim
+/// (`j3dai_frames_total{model="mbv1"}`).
+pub fn parse_text(text: &str) -> crate::Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // value is the last whitespace-separated token; the series name is
+        // everything before it (label values may contain escaped spaces
+        // only inside quotes, which split-at-last-space handles)
+        let (name, value) = line
+            .rsplit_once(char::is_whitespace)
+            .ok_or_else(|| anyhow::anyhow!("line {}: no value in {line:?}", ln + 1))?;
+        let v: f64 = value
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad value {value:?}: {e}", ln + 1))?;
+        out.insert(name.trim().to_string(), v);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -350,6 +468,93 @@ mod tests {
         h.observe(0.5);
         let text = r.render();
         assert!(text.contains("svc_bucket{model=\"x\",le=\"1\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn quantile_of_empty_histogram_is_none() {
+        let r = Registry::new();
+        let h = r.histogram("empty_us", "", &[1.0, 10.0]);
+        assert_eq!(h.quantile(50.0), None);
+        assert_eq!(h.quantile(99.0), None);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantile_single_sample_reports_its_bucket_for_any_p() {
+        let r = Registry::new();
+        let h = r.histogram("one_us", "", &[10.0, 100.0, 1000.0]);
+        h.observe(42.0);
+        // one sample in the le=100 bucket: every percentile maps to it
+        assert_eq!(h.quantile(1.0), Some(100.0));
+        assert_eq!(h.quantile(50.0), Some(100.0));
+        assert_eq!(h.quantile(99.0), Some(100.0));
+        // a sample past every bound degrades to the largest finite bound
+        h.observe(5000.0);
+        assert_eq!(h.quantile(99.0), Some(1000.0));
+    }
+
+    #[test]
+    fn counter_increments_from_many_threads_lose_nothing() {
+        let r = Registry::new();
+        let c = r.counter("mt_total", "");
+        let f = r.fcounter("mt_mj_total", "");
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                let f = f.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                        f.add(0.5);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+        assert!((f.get() - 40_000.0).abs() < 1e-6, "f={}", f.get());
+    }
+
+    #[test]
+    fn fcounter_ignores_negative_and_nonfinite() {
+        let f = FCounter::default();
+        f.add(1.5);
+        f.add(-3.0);
+        f.add(f64::NAN);
+        f.add(f64::INFINITY);
+        assert_eq!(f.get(), 1.5);
+    }
+
+    #[test]
+    fn rendered_text_reparses_to_the_same_numbers() {
+        let r = Registry::new();
+        r.counter_with("frames_total", &[("model", "mbv1")], "frames").add(7);
+        r.fcounter_with("energy_mj_total", &[("model", "mbv1")], "mJ").add(1.25);
+        r.gauge("fps", "").set(29.5);
+        let h = r.histogram("svc_us", "", &[10.0, 100.0]);
+        for v in [5.0, 50.0, 500.0] {
+            h.observe(v);
+        }
+        let parsed = parse_text(&r.render()).unwrap();
+        assert_eq!(parsed["frames_total{model=\"mbv1\"}"], 7.0);
+        assert_eq!(parsed["energy_mj_total{model=\"mbv1\"}"], 1.25);
+        assert_eq!(parsed["fps"], 29.5);
+        assert_eq!(parsed["svc_us_bucket{le=\"10\"}"], 1.0);
+        assert_eq!(parsed["svc_us_bucket{le=\"100\"}"], 2.0);
+        assert_eq!(parsed["svc_us_bucket{le=\"+Inf\"}"], 3.0);
+        assert_eq!(parsed["svc_us_sum"], 555.0);
+        assert_eq!(parsed["svc_us_count"], 3.0);
+        // and rendering the parse input again is a fixed point
+        assert_eq!(parse_text(&r.render()).unwrap(), parsed);
+    }
+
+    #[test]
+    fn parse_text_rejects_garbage_values() {
+        assert!(parse_text("metric_a notanumber").is_err());
+        assert!(parse_text("loneword").is_err());
+        assert!(parse_text("# just a comment\n").unwrap().is_empty());
     }
 
     #[test]

@@ -8,6 +8,10 @@
 //!   Prometheus-style text renderer (`j3dai metrics`).
 //! - [`trace`] — span collection and the Chrome trace-event exporter
 //!   (`j3dai trace --model mbv1 --out trace.json`, open in Perfetto).
+//! - [`energy`] — Activity → joules attribution: per-span `energy_pj`
+//!   trace args, per-component energy counters, power/TOPS-per-W gauges.
+//! - [`http`] — the `/metrics` + `/trace.json` exporter behind
+//!   `j3dai serve --metrics-addr` (std::net, blocking, scrape-grade).
 //! - [`json`] — dependency-free JSON emit/parse shared by the exporters.
 //!
 //! Span producers live next to the code they observe: the cycle engine
@@ -20,11 +24,15 @@
 //! monomorphized over a no-op sink, so disabled tracing costs nothing
 //! (asserted by `tests/telemetry_integration.rs`).
 
+pub mod energy;
+pub mod http;
 pub mod json;
 pub mod metrics;
 pub mod trace;
 
-pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use energy::{arithmetic_intensity, span_energy_pj, EnergyBreakdown, EnergyMetrics};
+pub use http::MetricsServer;
+pub use metrics::{Counter, FCounter, Gauge, Histogram, Registry};
 pub use trace::{ArgValue, TraceBuilder, TraceEvent, COMPILER_PID, FRAME_PID, SIM_PID};
 
 use std::sync::Mutex;

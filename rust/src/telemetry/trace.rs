@@ -40,6 +40,15 @@ impl ArgValue {
             ArgValue::Str(s) => format!("\"{}\"", json::escape(s)),
         }
     }
+
+    /// Numeric view of the arg (integers widen to f64); None for strings.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ArgValue::U64(v) => Some(*v as f64),
+            ArgValue::F64(v) => Some(*v),
+            ArgValue::Str(_) => None,
+        }
+    }
 }
 
 /// One complete span.

@@ -1,0 +1,110 @@
+//! End-to-end exporter test (the `serve --metrics-addr` path): a
+//! [`MetricsServer`] sharing one [`Telemetry`] domain with a running frame
+//! loop must serve live Prometheus text and a valid Chrome trace over a
+//! plain `TcpStream` *while frames flow*, and the scraped energy counters
+//! must agree with the cycle simulator's model.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use j3dai::config::ArchConfig;
+use j3dai::coordinator::{run_functional_loop, CoordinatorConfig};
+use j3dai::graph::Shape;
+use j3dai::power::EnergyModel;
+use j3dai::telemetry::{json, metrics, MetricsServer, Telemetry};
+use j3dai::{models, sim};
+
+/// Minimal HTTP GET — deliberately raw `TcpStream`, no client library.
+fn get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+    let mut text = String::new();
+    s.read_to_string(&mut text).unwrap();
+    let status = text.lines().next().unwrap_or("").to_string();
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn metrics_endpoint_is_live_while_frames_flow() {
+    let frames: u64 = 120;
+    let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+    let cfg = ArchConfig::j3dai();
+    let tel = Arc::new(Telemetry::new(true));
+    let mut srv = MetricsServer::spawn("127.0.0.1:0", Arc::clone(&tel)).unwrap();
+    let addr = srv.addr();
+
+    let worker = {
+        let tel = Arc::clone(&tel);
+        let g = g.clone();
+        let ccfg = CoordinatorConfig { target_fps: 500.0, frames, arch: cfg.clone() };
+        std::thread::spawn(move || run_functional_loop(&g, &ccfg, &tel).unwrap())
+    };
+
+    // poll /metrics until the energy counter shows up with frames still in
+    // flight — this is the "live while serving" acceptance criterion
+    let energy_key = "j3dai_energy_mj_total{model=\"tinycnn\"}";
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut mid_frames = 0.0f64;
+    loop {
+        let (status, body) = get(addr, "/metrics");
+        assert!(status.contains("200"), "{status}");
+        let series = metrics::parse_text(&body).unwrap();
+        if let Some(&mj) = series.get(energy_key) {
+            if mj > 0.0 {
+                mid_frames = series
+                    .get("j3dai_frames_total{model=\"tinycnn\"}")
+                    .copied()
+                    .unwrap_or(0.0);
+                break;
+            }
+        }
+        assert!(Instant::now() < deadline, "energy series never appeared:\n{body}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // /trace.json must be valid Chrome trace JSON mid-run too
+    let (status, body) = get(addr, "/trace.json");
+    assert!(status.contains("200"), "{status}");
+    let doc = json::Json::parse(&body).unwrap();
+    assert!(doc.get("traceEvents").and_then(json::Json::as_arr).is_some(), "no traceEvents");
+
+    let stats = worker.join().unwrap();
+    assert_eq!(stats.frames, frames);
+
+    // final scrape: every frame accounted, energy matches the model
+    let (_, body) = get(addr, "/metrics");
+    let series = metrics::parse_text(&body).unwrap();
+    let total_frames = series["j3dai_frames_total{model=\"tinycnn\"}"];
+    assert_eq!(total_frames, frames as f64);
+    assert!(mid_frames <= total_frames);
+
+    let per_frame_mj =
+        EnergyModel::fdsoi28().inference_mj(&sim::simulate(&g, &cfg).unwrap().activity);
+    let total_mj = series[energy_key];
+    let expect = per_frame_mj * frames as f64;
+    assert!(
+        (total_mj - expect).abs() <= expect * 1e-6,
+        "scraped {total_mj} mJ, model says {expect} mJ"
+    );
+    // the component split sums back to the total
+    let comp_sum: f64 = series
+        .iter()
+        .filter(|(k, _)| k.starts_with("j3dai_energy_component_mj_total{"))
+        .map(|(_, v)| v)
+        .sum();
+    assert!(
+        (comp_sum - total_mj).abs() <= expect * 1e-6,
+        "components {comp_sum} vs total {total_mj}"
+    );
+    // gauges guard the fps<=0 path at the type level; here they are real
+    let power_key = "j3dai_power_mw{model=\"tinycnn\"}";
+    assert!(series[power_key].is_finite() && series[power_key] > 0.0);
+
+    let (status, _) = get(addr, "/healthz");
+    assert!(status.contains("200"));
+    srv.shutdown();
+}

@@ -1,0 +1,168 @@
+//! Tier-1 PPA regression gate: the three Table I workloads must stay
+//! within tolerance of the paper, and `BENCH_ppa.json` (the `bench-ppa`
+//! subcommand's output) must round-trip exactly those numbers.
+//!
+//! Tolerances mirror what the calibration demonstrably sustains
+//! (EXPERIMENTS.md §Power, tests/pipeline_integration.rs): latency within
+//! 5% (structural cycle model), power within 10% (fdsoi28 fit residual is
+//! documented < 7% per cell; the gate leaves margin), MAC efficiency
+//! within 5 percentage points, TOPS/W within 15% (it compounds the MAC and
+//! power errors). Tightening these is a calibration task, not a test edit.
+
+use j3dai::config::ArchConfig;
+use j3dai::graph::Graph;
+use j3dai::power::EnergyModel;
+use j3dai::report;
+use j3dai::telemetry::json;
+use j3dai::{models, sim};
+
+/// Table I as printed in the paper.
+struct PaperRow {
+    key: &'static str,
+    mmacs: f64,
+    latency_ms: f64,
+    power_mw_30: f64,
+    /// None where the paper prints "-" (latency cannot sustain 200 FPS).
+    power_mw_200: Option<f64>,
+    tops_per_w: f64,
+    mac_eff: f64,
+}
+
+const TABLE1: [PaperRow; 3] = [
+    PaperRow {
+        key: "mbv1",
+        mmacs: 557.0,
+        latency_ms: 4.96,
+        power_mw_30: 47.6,
+        power_mw_200: Some(291.2),
+        tops_per_w: 0.77,
+        mac_eff: 0.768,
+    },
+    PaperRow {
+        key: "mbv2",
+        mmacs: 289.0,
+        latency_ms: 4.04,
+        power_mw_30: 30.5,
+        power_mw_200: Some(186.7),
+        tops_per_w: 0.62,
+        mac_eff: 0.466,
+    },
+    PaperRow {
+        key: "seg",
+        mmacs: 877.0,
+        latency_ms: 7.43,
+        power_mw_30: 63.8,
+        power_mw_200: None,
+        tops_per_w: 0.82,
+        mac_eff: 0.765,
+    },
+];
+
+fn graph_for(key: &str) -> Graph {
+    match key {
+        "mbv1" => models::paper_mbv1(),
+        "mbv2" => models::paper_mbv2(),
+        "seg" => models::paper_seg(),
+        other => panic!("no paper workload {other}"),
+    }
+}
+
+#[track_caller]
+fn assert_rel(got: f64, want: f64, tol: f64, what: &str) {
+    assert!(
+        (got - want).abs() / want <= tol,
+        "{what}: got {got}, paper says {want} (tolerance {:.0}%)",
+        tol * 100.0
+    );
+}
+
+#[test]
+fn table1_ppa_within_tolerance() {
+    let cfg = ArchConfig::j3dai();
+    let em = EnergyModel::fdsoi28();
+    for row in &TABLE1 {
+        let r = sim::simulate(&graph_for(row.key), &cfg).unwrap();
+        let e = report::ppa_entry(&r, &em);
+        assert_rel(e.mmacs, row.mmacs, 0.05, &format!("{} MMACs", row.key));
+        assert_rel(e.latency_ms, row.latency_ms, 0.05, &format!("{} latency", row.key));
+        assert_rel(
+            e.power_mw_30.unwrap(),
+            row.power_mw_30,
+            0.10,
+            &format!("{} power@30", row.key),
+        );
+        match row.power_mw_200 {
+            Some(p200) => assert_rel(
+                e.power_mw_200.unwrap(),
+                p200,
+                0.10,
+                &format!("{} power@200", row.key),
+            ),
+            None => assert!(
+                e.power_mw_200.is_none(),
+                "{}: paper prints '-' at 200 FPS but the model sustains it",
+                row.key
+            ),
+        }
+        assert_rel(e.tops_per_w.unwrap(), row.tops_per_w, 0.15, &format!("{} TOPS/W", row.key));
+        assert!(
+            (e.mac_eff - row.mac_eff).abs() < 0.05,
+            "{} MAC efficiency: got {}, paper {}",
+            row.key,
+            e.mac_eff,
+            row.mac_eff
+        );
+        // energy is the power slope: P(fps) = E_inf * fps + P_static
+        let slope_mj = (em.power_mw(&r.activity, 200.0) - em.power_mw(&r.activity, 30.0)) / 170.0;
+        assert!((slope_mj - e.energy_mj).abs() < 1e-9, "{}", row.key);
+    }
+}
+
+/// Satellite golden test: the calibrated fdsoi28 coefficients, fed the
+/// simulator's Activity, reproduce the paper's measured power cells.
+#[test]
+fn fdsoi28_golden_reproduces_table1_power() {
+    let cfg = ArchConfig::j3dai();
+    let em = EnergyModel::fdsoi28();
+    for row in &TABLE1 {
+        let r = sim::simulate(&graph_for(row.key), &cfg).unwrap();
+        let p30 = em.power_mw(&r.activity, 30.0);
+        assert_rel(p30, row.power_mw_30, 0.075, &format!("{} golden power@30", row.key));
+        if let Some(p200_paper) = row.power_mw_200 {
+            let p200 = em.power_mw(&r.activity, 200.0);
+            assert_rel(p200, p200_paper, 0.075, &format!("{} golden power@200", row.key));
+        }
+    }
+}
+
+#[test]
+fn bench_ppa_json_gates_and_round_trips() {
+    let cfg = ArchConfig::j3dai();
+    let em = EnergyModel::fdsoi28();
+    let entries: Vec<report::PpaEntry> = TABLE1
+        .iter()
+        .map(|row| {
+            report::ppa_entry(&sim::simulate(&graph_for(row.key), &cfg).unwrap(), &em)
+        })
+        .collect();
+    let text = report::bench_ppa_json(&cfg, &entries);
+    let doc = json::Json::parse(&text).unwrap();
+
+    let arch = doc.get("arch").expect("arch header");
+    assert_eq!(arch.get("macs_per_cycle").and_then(json::Json::as_f64), Some(768.0));
+    assert_eq!(arch.get("peak_gops").and_then(json::Json::as_f64), Some(307.2));
+    assert!(arch.get("die_mm2").and_then(json::Json::as_f64).unwrap() > 0.0);
+
+    let rows = doc.get("models").and_then(json::Json::as_arr).expect("models array");
+    assert_eq!(rows.len(), TABLE1.len());
+    for (row, j) in TABLE1.iter().zip(rows) {
+        let f = |k: &str| j.get(k).and_then(json::Json::as_f64).unwrap();
+        assert_rel(f("latency_ms"), row.latency_ms, 0.05, &format!("{} json latency", row.key));
+        assert_rel(f("power_mw_30"), row.power_mw_30, 0.10, &format!("{} json power", row.key));
+        assert!(f("energy_mj") > 0.0);
+        if row.power_mw_200.is_none() {
+            // a "-" cell must serialize as JSON null, never as 0
+            assert_eq!(j.get("power_mw_200"), Some(&json::Json::Null), "{}", row.key);
+        }
+    }
+}

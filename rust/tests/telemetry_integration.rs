@@ -53,6 +53,32 @@ fn chrome_export_parses_and_roundtrips() {
 }
 
 #[test]
+fn every_sim_span_carries_energy() {
+    // acceptance bar for the energy attribution: every instruction- and
+    // layer-level span exported to Perfetto has a finite, non-negative
+    // args.energy_pj (compute spans strictly positive — MAC + ctrl energy)
+    let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+    let cfg = ArchConfig::j3dai();
+    let (_, tr) = sim::simulate_traced(&g, &cfg).unwrap();
+    let host_tid = cfg.clusters as u32 * 2 + 1;
+    let mut checked = 0usize;
+    for e in tr.trace.events.iter().filter(|e| e.pid == SIM_PID && e.tid != host_tid) {
+        let pj = e
+            .args
+            .iter()
+            .find(|(k, _)| k == "energy_pj")
+            .and_then(|(_, v)| v.as_f64())
+            .unwrap_or_else(|| panic!("span {} has no energy_pj arg", e.name));
+        assert!(pj.is_finite() && pj >= 0.0, "span {}: energy_pj={pj}", e.name);
+        if e.tid % 2 == 0 && e.tid < host_tid - 1 {
+            assert!(pj > 0.0, "compute span {} reports zero energy", e.name);
+        }
+        checked += 1;
+    }
+    assert!(checked > 0);
+}
+
+#[test]
 fn disabled_tracing_costs_under_five_percent() {
     let g = models::paper_mbv1();
     let cfg = ArchConfig::j3dai();
