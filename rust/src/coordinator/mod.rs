@@ -19,11 +19,16 @@
 //! frame-loop metrics (`j3dai_frames_total`, `j3dai_inference_service_us`,
 //! `j3dai_capture_us`, `j3dai_queue_depth`, `j3dai_achieved_fps`) plus the
 //! energy series (`j3dai_energy_mj_total` and friends — see
-//! [`telemetry::energy`]) into the coordinator's [`Telemetry`] registry —
-//! [`RunStats`] is derived from those series, not from a private tally.
-//! The registry/trace pair is held behind an [`Arc`] so the live exporter
-//! (`j3dai serve --metrics-addr`, [`crate::telemetry::MetricsServer`]) can
-//! scrape it while frames flow.
+//! [`telemetry::energy`]), their per-cluster splits and the PMU stall
+//! counters (`j3dai_stall_cycles_total{cluster,reason}`) into the
+//! coordinator's [`Telemetry`] registry — [`RunStats`] is derived from
+//! those series, not from a private tally. Each processed frame also
+//! pushes a snapshot (queue depth, fps, power, cumulative energy) into the
+//! ring sampler behind `/timeseries.json`, and the service histogram
+//! carries an exemplar naming the slowest frame. The registry/trace pair
+//! is held behind an [`Arc`] so the live exporter (`j3dai serve
+//! --metrics-addr`, [`crate::telemetry::MetricsServer`]) can scrape it
+//! while frames flow.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -32,13 +37,14 @@ use std::time::{Duration, Instant};
 
 use crate::config::ArchConfig;
 use crate::graph::{Graph, Shape};
-use crate::power::EnergyModel;
+use crate::power::{Activity, EnergyModel};
 use crate::runtime::Runtime;
 use crate::sensor::PixelArray;
 use crate::sim::functional::Tensor;
 use crate::sim::{self, SimResult};
 use crate::telemetry::{
-    self, ArgValue, EnergyMetrics, Telemetry, TraceEvent, FRAME_PID, SERVICE_US_BUCKETS,
+    self, ArgValue, ClusterEnergyMetrics, EnergyMetrics, RingSampler, StallMetrics, Telemetry,
+    TraceEvent, FRAME_PID, SERVICE_US_BUCKETS,
 };
 
 /// One processed frame.
@@ -183,6 +189,11 @@ fn run_frame_loop(
     let modeled_power_mw = em.power_mw(&simr.activity, modeled_fps);
     let labels: &[(&str, &str)] = &[("model", model)];
     let energy_metrics = EnergyMetrics::register(&tel.registry, model);
+    // per-cluster attribution: the sim result's cluster Activities partition
+    // the inference, and each cluster's PMU bank classifies its idle cycles
+    let cluster_energy = ClusterEnergyMetrics::register(&tel.registry, model, simr.clusters.len());
+    let cluster_acts: Vec<Activity> = simr.clusters.iter().map(|c| c.activity).collect();
+    let stall_metrics = StallMetrics::register(&tel.registry, model, simr.clusters.len());
     let frames_total =
         tel.registry.counter_with("j3dai_frames_total", labels, "Frames fully processed");
     let service_hist = tel.registry.histogram_with(
@@ -204,6 +215,10 @@ fn run_frame_loop(
     // snapshots: RunStats is derived from the registry deltas of this run,
     // so several runs can share one Telemetry domain
     let (count0, sum0, n0) = (frames_total.get(), service_hist.sum(), service_hist.count());
+    // live time series for /timeseries.json: one snapshot per processed
+    // frame (wall-clock timestamps; no coalescing — frames ARE the grid)
+    let series = ["queue_depth", "achieved_fps", "power_mw", "energy_mj_total"];
+    tel.install_sampler(RingSampler::new(0.0, 1024, series.map(String::from).into()));
     tel.name_process(FRAME_PID, "frame-loop");
     tel.name_thread(FRAME_PID, 0, "capture");
     tel.name_thread(FRAME_PID, 1, "infer");
@@ -241,7 +256,8 @@ fn run_frame_loop(
     let mut loop_err = None;
     let t0 = Instant::now();
     while let Ok((i, frame, cap_ts, cap_dur)) = rx.recv() {
-        depth_gauge.set(depth.fetch_sub(1, Ordering::Relaxed).saturating_sub(1) as f64);
+        let queue_depth = depth.fetch_sub(1, Ordering::Relaxed).saturating_sub(1) as f64;
+        depth_gauge.set(queue_depth);
         capture_hist.observe(cap_dur);
         tel.record(TraceEvent {
             name: "capture".to_string(),
@@ -273,9 +289,18 @@ fn run_frame_loop(
                 ("top_class".to_string(), ArgValue::U64(top_class as u64)),
             ],
         });
-        service_hist.observe(service_us);
+        // the exemplar pins the worst frame's id onto the hot bucket, so a
+        // scrape can jump straight from the histogram to the trace span
+        service_hist.observe_with_exemplar(service_us, &format!("frame{i}"));
         frames_total.inc();
         energy_metrics.record_inference(em, &simr.activity, modeled_fps);
+        cluster_energy.record_inference(em, &cluster_acts);
+        stall_metrics.record(simr.clusters.iter().map(|c| &c.pmu));
+        let fps_now = (records.len() + 1) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        tel.sample(
+            tel.now_us(),
+            vec![queue_depth, fps_now, modeled_power_mw, energy_metrics.total_mj()],
+        );
         records.push(FrameRecord {
             frame_idx: i,
             top_class,

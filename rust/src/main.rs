@@ -3,12 +3,18 @@
 //! ```text
 //! j3dai serve  [--model NAME] [--fps N] [--frames N] [--trace-out F]
 //!              [--metrics-addr HOST:PORT]             run the frame loop (+ live /metrics)
-//! j3dai sim    [--model mbv1|mbv2|seg|all] [--trace-out F]   cycle-simulate Table I workloads
-//! j3dai trace  [--model NAME] [--out trace.json]       traced sim -> Perfetto trace + layer table
-//! j3dai roofline [--model NAME]                        per-layer roofline (GOPS vs MACs/byte)
-//! j3dai metrics [--model NAME] [--frames N]            functional frame loop -> Prometheus text
+//! j3dai sim    [--model mbv1|mbv2|seg|all] [--trace-out F] [--profile-out F]
+//!                                                      cycle-simulate Table I workloads
+//!                                                      (+ per-cluster/per-layer stall attribution)
+//! j3dai trace  [--model NAME] [--out trace.json] [--profile-out F]
+//!                                                      traced sim -> Perfetto trace + layer table
+//! j3dai sample [--model NAME] [--interval N] [--out F] cycle-binned time series -> JSON
+//! j3dai roofline [--model NAME] [--svg-out F]          per-layer roofline (GOPS vs MACs/byte)
+//! j3dai metrics [--model NAME] [--frames N] [--exemplars]  functional loop -> Prometheus text
 //! j3dai bench-telemetry [--out BENCH_telemetry.json]   tracing-overhead benchmark file
 //! j3dai bench-ppa [--out BENCH_ppa.json]               PPA regression file (energy/latency/TOPS/W)
+//! j3dai bench-compare OLD.json NEW.json [--latency-tol PCT] [--power-tol PCT] [--topsw-tol PCT]
+//!                                                      PPA trajectory diff, exit 1 on regression
 //! j3dai table1 | table2 | fig5 | fig6                  print a paper table/figure
 //! j3dai compile [--model ...]                          show mapping/schedule report
 //! j3dai list                                           list loaded artifacts
@@ -29,6 +35,28 @@ fn flag(args: &[String], name: &str) -> Option<String> {
 
 fn has_flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
+}
+
+/// Positional (non-flag) arguments after the subcommand. `value_flags`
+/// lists the flags that consume the following token, so flag values are
+/// never mistaken for positionals.
+fn positionals(args: &[String], value_flags: &[&str]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 1; // args[0] is the subcommand
+    while i < args.len() {
+        let a = &args[i];
+        if value_flags.contains(&a.as_str()) {
+            i += 2;
+            continue;
+        }
+        if a.starts_with("--") {
+            i += 1;
+            continue;
+        }
+        out.push(a.clone());
+        i += 1;
+    }
+    out
 }
 
 /// Canonical model key: long-form names alias the paper keys.
@@ -128,11 +156,21 @@ fn run() -> j3dai::Result<()> {
                 vec![model_key(&which)]
             };
             let trace_out = flag(&args, "--trace-out");
+            let profile_out = flag(&args, "--profile-out");
             let mut merged = j3dai::telemetry::TraceBuilder::new();
+            let mut folded = j3dai::telemetry::FoldedProfile::new();
             for (mi, &key) in keys.iter().enumerate() {
                 let g = require_graph(key)?;
-                let r = if trace_out.is_some() {
+                let r = if trace_out.is_some() || profile_out.is_some() {
                     let (r, mut tr) = sim::simulate_traced(&g, &cfg)?;
+                    if keys.len() > 1 {
+                        // namespace per-model stacks in a multi-model profile
+                        folded.merge_prefixed(key, &tr.folded);
+                    } else {
+                        for (stack, w) in tr.folded.iter() {
+                            folded.add(stack.to_string(), w);
+                        }
+                    }
                     // one process row per model so timelines don't interleave
                     tr.trace.shift_pid(mi as u32 * 10);
                     merged.merge(tr.trace);
@@ -157,11 +195,18 @@ fn run() -> j3dai::Result<()> {
                         a.busy_cluster_cycles, em.inference_mj(a)
                     );
                 }
+                print!("{}", report::render_cluster_table(&r, &em));
+                print!("{}", report::render_stall_table(&g, &r));
             }
             if let Some(path) = trace_out {
                 std::fs::write(&path, merged.to_chrome_json())
                     .with_context(|| format!("cannot write trace to {path}"))?;
                 println!("sim trace written to {path} (open in ui.perfetto.dev)");
+            }
+            if let Some(path) = profile_out {
+                std::fs::write(&path, folded.render())
+                    .with_context(|| format!("cannot write profile to {path}"))?;
+                println!("folded stacks written to {path} (inferno-flamegraph < {path} > f.svg)");
             }
         }
         "trace" => {
@@ -183,6 +228,43 @@ fn run() -> j3dai::Result<()> {
                 tr.trace.len()
             );
             println!("open in ui.perfetto.dev (\"Open trace file\") or chrome://tracing");
+            if let Some(path) = flag(&args, "--profile-out") {
+                std::fs::write(&path, tr.folded.render())
+                    .with_context(|| format!("cannot write profile to {path}"))?;
+                println!("folded stacks written to {path} (inferno-flamegraph < {path} > f.svg)");
+            }
+        }
+        "sample" => {
+            if has_flag(&args, "--help") {
+                println!(
+                    "j3dai sample [--model NAME] [--interval CYCLES] [--capacity N] [--out F]"
+                );
+                println!();
+                println!("Cycle-simulate one model with the ring-buffer time-series sampler");
+                println!("attached: every --interval cycles (default 4096) it snapshots");
+                println!("per-cluster utilization and per-component power into a ring of");
+                println!("--capacity samples (default 1024, oldest dropped) and writes the");
+                println!("series as JSON (default timeseries.json — same shape as the live");
+                println!("endpoint's /timeseries.json).");
+                return Ok(());
+            }
+            let key = flag(&args, "--model").unwrap_or_else(|| "mbv1".into());
+            let interval: u64 =
+                flag(&args, "--interval").and_then(|v| v.parse().ok()).unwrap_or(4096);
+            let capacity: usize =
+                flag(&args, "--capacity").and_then(|v| v.parse().ok()).unwrap_or(1024);
+            let out = flag(&args, "--out").unwrap_or_else(|| "timeseries.json".into());
+            let g = require_graph(&key)?;
+            let (r, sampler) = sim::sample_timeseries(&g, &cfg, interval, capacity)?;
+            std::fs::write(&out, sampler.to_json())
+                .with_context(|| format!("cannot write {out}"))?;
+            println!(
+                "{}: {} cycles sampled every {interval} -> {} samples ({} dropped) in {out}",
+                r.model,
+                r.cycles,
+                sampler.len(),
+                sampler.dropped()
+            );
         }
         "metrics" => {
             let key = flag(&args, "--model").unwrap_or_else(|| "tinycnn_24x32".into());
@@ -192,7 +274,11 @@ fn run() -> j3dai::Result<()> {
             let tel = Telemetry::new(false); // metrics only; no span buffer
             let ccfg = CoordinatorConfig { target_fps: fps, frames, arch: cfg };
             let stats = coordinator::run_functional_loop(&g, &ccfg, &tel)?;
-            print!("{}", tel.render_metrics());
+            if has_flag(&args, "--exemplars") {
+                print!("{}", tel.registry.render_with_exemplars(true));
+            } else {
+                print!("{}", tel.render_metrics());
+            }
             eprintln!(
                 "# {} frames, mean {:.0} us, p99 {:.0} us",
                 stats.frames, stats.mean_service_us, stats.p99_service_us
@@ -232,18 +318,26 @@ fn run() -> j3dai::Result<()> {
         }
         "roofline" => {
             if has_flag(&args, "--help") {
-                println!("j3dai roofline [--model mbv1|mbv2|seg|<artifact>]  (default: mbv1)");
+                println!(
+                    "j3dai roofline [--model mbv1|mbv2|seg|<artifact>] [--svg-out F]  (default: mbv1)"
+                );
                 println!();
                 println!("Per-layer roofline analysis of a traced simulation: arithmetic");
                 println!("intensity (MACs per off-cluster byte) against achieved GOPS, with");
                 println!("the attainable ceiling set by the peak MAC rate or the DMPA/DMA");
                 println!("bandwidth slope — memory-bound layers are flagged MEMORY.");
+                println!("--svg-out writes the same plot as a standalone log-log SVG.");
                 return Ok(());
             }
             let key = flag(&args, "--model").unwrap_or_else(|| "mbv1".into());
             let g = require_graph(&key)?;
             let (_, tr) = sim::simulate_traced(&g, &cfg)?;
             print!("{}", report::render_roofline(&tr, &cfg));
+            if let Some(path) = flag(&args, "--svg-out") {
+                std::fs::write(&path, report::roofline_svg(&tr, &cfg))
+                    .with_context(|| format!("cannot write {path}"))?;
+                println!("roofline plot written to {path}");
+            }
         }
         "bench-ppa" => {
             if has_flag(&args, "--help") {
@@ -274,6 +368,52 @@ fn run() -> j3dai::Result<()> {
             std::fs::write(&out, report::bench_ppa_json(&cfg, &entries))
                 .with_context(|| format!("cannot write {out}"))?;
             println!("wrote {out}");
+        }
+        "bench-compare" => {
+            let tols = ["--latency-tol", "--power-tol", "--topsw-tol"];
+            let files = positionals(&args, &tols);
+            if has_flag(&args, "--help") || files.len() < 2 {
+                println!(
+                    "j3dai bench-compare OLD.json NEW.json [MORE.json ...] \
+                     [--latency-tol PCT] [--power-tol PCT] [--topsw-tol PCT]"
+                );
+                println!();
+                println!("Diff two or more bench-ppa output files (oldest first) and print");
+                println!("the per-model PPA trajectory: latency, power @30 FPS and TOPS/W");
+                println!("across runs, with the first-vs-last delta. Exits non-zero if any");
+                println!("metric regressed past its tolerance (defaults: latency 5%, power");
+                println!("10%, TOPS/W 10%) — wire it into CI against a committed baseline.");
+                if files.len() < 2 && !has_flag(&args, "--help") {
+                    anyhow::bail!("bench-compare needs at least two bench-ppa files");
+                }
+                return Ok(());
+            }
+            let mut thr = report::compare::CompareThresholds::default();
+            if let Some(v) = flag(&args, "--latency-tol").and_then(|v| v.parse().ok()) {
+                thr.latency_pct = v;
+            }
+            if let Some(v) = flag(&args, "--power-tol").and_then(|v| v.parse().ok()) {
+                thr.power_pct = v;
+            }
+            if let Some(v) = flag(&args, "--topsw-tol").and_then(|v| v.parse().ok()) {
+                thr.tops_w_pct = v;
+            }
+            let mut parsed = Vec::new();
+            for path in &files {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("cannot read {path}"))?;
+                parsed.push(report::compare::parse_bench_ppa(path, &text)?);
+            }
+            let cmp = report::compare::compare(&parsed, &thr)?;
+            print!("{}", cmp.table);
+            for reg in &cmp.regressions {
+                eprintln!("REGRESSION {}: {}", reg.model, reg.detail);
+            }
+            anyhow::ensure!(
+                cmp.regressions.is_empty(),
+                "{} PPA regression(s) past tolerance",
+                cmp.regressions.len()
+            );
         }
         "table1" => {
             let rows = [
@@ -360,11 +500,15 @@ fn run() -> j3dai::Result<()> {
 fn print_help() {
     println!("j3dai — J3DAI (ISLPED'25) digital-system reproduction");
     println!(
-        "commands: serve | sim | trace | roofline | metrics | bench-telemetry | bench-ppa | \
-         table1 | table2 | fig5 | fig6 | compile | list"
+        "commands: serve | sim | trace | sample | roofline | metrics | bench-telemetry | \
+         bench-ppa | bench-compare | table1 | table2 | fig5 | fig6 | compile | list"
     );
-    println!("  serve --metrics-addr HOST:PORT exposes live /metrics and /trace.json");
-    println!("  roofline --help / bench-ppa --help print per-command usage");
+    println!(
+        "  serve --metrics-addr HOST:PORT exposes live /metrics, /trace.json, /timeseries.json"
+    );
+    println!("  sim/trace --profile-out F write inferno-format folded stacks (flamegraphs)");
+    println!("  roofline --svg-out F writes the roofline plot as a standalone SVG");
+    println!("  sample / roofline / bench-ppa / bench-compare --help print per-command usage");
 }
 
 // (dev helper kept out of the help text: `j3dai tiles` prints per-model

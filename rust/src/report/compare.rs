@@ -1,0 +1,327 @@
+//! Bench-trajectory comparison — diffs two or more `BENCH_ppa.json`
+//! snapshots and gates CI on regressions past configurable thresholds
+//! (`j3dai bench-compare old.json new.json`).
+//!
+//! The first file is the baseline, the last is the candidate; files in
+//! between only add columns to the trajectory table. Null JSON cells (the
+//! paper's "-" entries, e.g. power at an unsustainable frame rate) print
+//! as "-" and regress only when a previously-present metric disappears.
+
+use crate::telemetry::json::Json;
+
+/// One model's PPA metrics parsed from a `BENCH_ppa.json` snapshot. Every
+/// metric is optional: the writer emits JSON null where the paper prints
+/// "-".
+#[derive(Debug, Clone, Default)]
+pub struct BenchModel {
+    pub model: String,
+    pub latency_ms: Option<f64>,
+    pub energy_mj: Option<f64>,
+    pub power_mw_30: Option<f64>,
+    pub power_mw_200: Option<f64>,
+    pub tops_per_w: Option<f64>,
+    pub mac_eff: Option<f64>,
+}
+
+/// One parsed snapshot: a display label (the file name) plus its models.
+#[derive(Debug, Clone)]
+pub struct BenchFile {
+    pub label: String,
+    pub models: Vec<BenchModel>,
+}
+
+/// Parse one `BENCH_ppa.json` document.
+pub fn parse_bench_ppa(label: &str, text: &str) -> crate::Result<BenchFile> {
+    let doc = Json::parse(text)?;
+    let models = doc
+        .get("models")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("{label}: missing \"models\" array"))?;
+    let num = |m: &Json, k: &str| m.get(k).and_then(Json::as_f64);
+    let parsed = models
+        .iter()
+        .map(|m| {
+            let name = m
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("{label}: model entry without a name"))?;
+            Ok(BenchModel {
+                model: name.to_string(),
+                latency_ms: num(m, "latency_ms"),
+                energy_mj: num(m, "energy_mj"),
+                power_mw_30: num(m, "power_mw_30"),
+                power_mw_200: num(m, "power_mw_200"),
+                tops_per_w: num(m, "tops_per_w"),
+                mac_eff: num(m, "mac_eff"),
+            })
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    Ok(BenchFile { label: label.to_string(), models: parsed })
+}
+
+/// Regression tolerances, percent of the baseline value.
+#[derive(Debug, Clone, Copy)]
+pub struct CompareThresholds {
+    pub latency_pct: f64,
+    pub power_pct: f64,
+    pub tops_w_pct: f64,
+}
+
+impl Default for CompareThresholds {
+    fn default() -> Self {
+        CompareThresholds { latency_pct: 5.0, power_pct: 10.0, tops_w_pct: 10.0 }
+    }
+}
+
+/// One detected regression (candidate worse than baseline past tolerance).
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub model: String,
+    pub metric: &'static str,
+    pub detail: String,
+}
+
+/// Comparison output: the rendered trajectory table plus the gated
+/// regressions (empty = pass).
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub table: String,
+    pub regressions: Vec<Regression>,
+}
+
+/// The metrics a trajectory row tracks: `(name, higher_is_better, gated)`.
+/// Ungated metrics (energy, MAC efficiency) are informational rows only.
+const METRICS: [(&str, bool, bool); 6] = [
+    ("latency_ms", false, true),
+    ("energy_mj", false, false),
+    ("power_mw_30", false, true),
+    ("power_mw_200", false, true),
+    ("tops_per_w", true, true),
+    ("mac_eff", true, false),
+];
+
+fn metric(m: &BenchModel, name: &str) -> Option<f64> {
+    match name {
+        "latency_ms" => m.latency_ms,
+        "energy_mj" => m.energy_mj,
+        "power_mw_30" => m.power_mw_30,
+        "power_mw_200" => m.power_mw_200,
+        "tops_per_w" => m.tops_per_w,
+        "mac_eff" => m.mac_eff,
+        _ => None,
+    }
+}
+
+fn tolerance(thr: &CompareThresholds, name: &str) -> f64 {
+    match name {
+        "latency_ms" => thr.latency_pct,
+        "power_mw_30" | "power_mw_200" => thr.power_pct,
+        "tops_per_w" => thr.tops_w_pct,
+        _ => f64::INFINITY,
+    }
+}
+
+fn opt_cell(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.4}")).unwrap_or_else(|| "-".into())
+}
+
+fn delta_cell(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:+.1}")).unwrap_or_else(|| "-".into())
+}
+
+fn clip(s: &str, n: usize) -> String {
+    let chars: Vec<char> = s.chars().collect();
+    if chars.len() <= n {
+        s.to_string()
+    } else {
+        chars[chars.len() - n..].iter().collect()
+    }
+}
+
+/// Compare two or more snapshots: baseline = first file, candidate = last.
+/// Returns the trajectory table and every gated regression; the caller
+/// (CLI) exits non-zero when `regressions` is non-empty.
+pub fn compare(files: &[BenchFile], thr: &CompareThresholds) -> crate::Result<Comparison> {
+    anyhow::ensure!(files.len() >= 2, "bench-compare needs at least two files");
+    let base = &files[0];
+    let cand = files.last().unwrap();
+
+    let mut table = String::from("Bench trajectory (baseline = first, candidate = last)\n");
+    table.push_str(&format!("{:<14} {:<14}", "Model", "Metric"));
+    for f in files {
+        table.push_str(&format!(" {:>16}", clip(&f.label, 16)));
+    }
+    table.push_str(&format!(" {:>8}\n", "delta %"));
+
+    let mut regressions = Vec::new();
+    for bm in &base.models {
+        let Some(cm) = cand.models.iter().find(|m| m.model == bm.model) else {
+            let detail = format!("{} missing from {}", bm.model, cand.label);
+            regressions.push(Regression { model: bm.model.clone(), metric: "model", detail });
+            continue;
+        };
+        for (name, higher_better, gated) in METRICS {
+            table.push_str(&format!("{:<14} {:<14}", bm.model, name));
+            for f in files {
+                let v =
+                    f.models.iter().find(|m| m.model == bm.model).and_then(|m| metric(m, name));
+                table.push_str(&format!(" {:>16}", opt_cell(v)));
+            }
+            let (b, c) = (metric(bm, name), metric(cm, name));
+            let delta = match (b, c) {
+                (Some(bv), Some(cv)) if bv != 0.0 => Some((cv / bv - 1.0) * 100.0),
+                _ => None,
+            };
+            table.push_str(&format!(" {:>8}\n", delta_cell(delta)));
+            if !gated {
+                continue;
+            }
+            let tol = tolerance(thr, name);
+            match (b, c) {
+                (Some(bv), Some(cv)) => {
+                    let pct = if bv != 0.0 { (cv / bv - 1.0) * 100.0 } else { 0.0 };
+                    let worse = if higher_better { -pct } else { pct };
+                    if worse > tol {
+                        let detail =
+                            format!("{name} {bv:.4} -> {cv:.4} ({pct:+.1}%, tolerance {tol}%)");
+                        regressions.push(Regression {
+                            model: bm.model.clone(),
+                            metric: name,
+                            detail,
+                        });
+                    }
+                }
+                (Some(bv), None) => {
+                    let detail = format!("{name} {bv:.4} -> null (metric disappeared)");
+                    regressions.push(Regression { model: bm.model.clone(), metric: name, detail });
+                }
+                _ => {} // baseline null: nothing to gate against
+            }
+        }
+    }
+    Ok(Comparison { table, regressions })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot(label: &str, latency: f64, p200: Option<f64>, topsw: f64) -> BenchFile {
+        BenchFile {
+            label: label.into(),
+            models: vec![BenchModel {
+                model: "mbv1_1_1".into(),
+                latency_ms: Some(latency),
+                energy_mj: Some(1.2),
+                power_mw_30: Some(47.0),
+                power_mw_200: p200,
+                tops_per_w: Some(topsw),
+                mac_eff: Some(0.76),
+            }],
+        }
+    }
+
+    #[test]
+    fn parses_ppa_json_with_null_cells() {
+        let text = r#"{"arch": {"clusters": 6},
+            "models": [{"model": "fpnseg_1_2", "latency_ms": 7.43, "energy_mj": null,
+                        "power_mw_30": 63.8, "power_mw_200": null, "tops_per_w": 0.82,
+                        "mac_eff": 0.765, "max_fps": null}]}"#;
+        let f = parse_bench_ppa("paper", text).unwrap();
+        assert_eq!(f.models.len(), 1);
+        let m = &f.models[0];
+        assert_eq!(m.model, "fpnseg_1_2");
+        assert_eq!(m.latency_ms, Some(7.43));
+        assert_eq!(m.power_mw_200, None);
+        assert_eq!(m.energy_mj, None);
+        // malformed documents error instead of panicking
+        assert!(parse_bench_ppa("bad", "{\"models\": 3}").is_err());
+        assert!(parse_bench_ppa("bad", "not json").is_err());
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = snapshot("base.json", 5.0, Some(290.0), 0.77);
+        let cand = snapshot("cand.json", 5.2, Some(300.0), 0.75);
+        let cmp = compare(&[base, cand], &CompareThresholds::default()).unwrap();
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        assert!(cmp.table.contains("latency_ms"), "{}", cmp.table);
+        assert!(cmp.table.contains("base.json"), "{}", cmp.table);
+    }
+
+    #[test]
+    fn latency_regression_detected() {
+        let base = snapshot("base.json", 5.0, Some(290.0), 0.77);
+        let cand = snapshot("cand.json", 5.6, Some(290.0), 0.77);
+        let cmp = compare(&[base, cand], &CompareThresholds::default()).unwrap();
+        assert_eq!(cmp.regressions.len(), 1, "{:?}", cmp.regressions);
+        assert_eq!(cmp.regressions[0].metric, "latency_ms");
+        assert!(cmp.regressions[0].detail.contains("tolerance"), "{:?}", cmp.regressions);
+    }
+
+    #[test]
+    fn efficiency_drop_and_improvements_gate_correctly() {
+        // TOPS/W is higher-is-better: a 20% drop past the 10% tolerance gates
+        let base = snapshot("base.json", 5.0, Some(290.0), 0.80);
+        let cand = snapshot("cand.json", 5.0, Some(290.0), 0.64);
+        let cmp = compare(&[base, cand], &CompareThresholds::default()).unwrap();
+        assert_eq!(cmp.regressions.len(), 1, "{:?}", cmp.regressions);
+        assert_eq!(cmp.regressions[0].metric, "tops_per_w");
+        // improvements on every axis never regress
+        let base = snapshot("base.json", 5.0, Some(290.0), 0.77);
+        let cand = snapshot("cand.json", 4.0, Some(200.0), 0.95);
+        let cmp = compare(&[base, cand], &CompareThresholds::default()).unwrap();
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+    }
+
+    #[test]
+    fn disappearing_metric_regresses_but_null_baseline_does_not() {
+        let base = snapshot("base.json", 5.0, Some(290.0), 0.77);
+        let cand = snapshot("cand.json", 5.0, None, 0.77);
+        let cmp = compare(&[base, cand], &CompareThresholds::default()).unwrap();
+        assert_eq!(cmp.regressions.len(), 1, "{:?}", cmp.regressions);
+        assert_eq!(cmp.regressions[0].metric, "power_mw_200");
+        // None -> Some never gates, and null cells render as "-"
+        let base = snapshot("base.json", 5.0, None, 0.77);
+        let cand = snapshot("cand.json", 5.0, Some(290.0), 0.77);
+        let cmp = compare(&[base, cand], &CompareThresholds::default()).unwrap();
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        assert!(cmp.table.contains(" -"), "{}", cmp.table);
+    }
+
+    #[test]
+    fn missing_model_is_a_regression() {
+        let base = snapshot("base.json", 5.0, Some(290.0), 0.77);
+        let mut cand = snapshot("cand.json", 5.0, Some(290.0), 0.77);
+        cand.models[0].model = "other".into();
+        let cmp = compare(&[base, cand], &CompareThresholds::default()).unwrap();
+        assert_eq!(cmp.regressions.len(), 1, "{:?}", cmp.regressions);
+        assert_eq!(cmp.regressions[0].metric, "model");
+    }
+
+    #[test]
+    fn three_files_gate_only_first_vs_last() {
+        let base = snapshot("a.json", 5.0, Some(290.0), 0.77);
+        let mid = snapshot("b.json", 9.0, Some(400.0), 0.30); // bad middle run
+        let cand = snapshot("c.json", 5.1, Some(292.0), 0.77);
+        let cmp = compare(&[base, mid, cand], &CompareThresholds::default()).unwrap();
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        for label in ["a.json", "b.json", "c.json"] {
+            assert!(cmp.table.contains(label), "{}", cmp.table);
+        }
+    }
+
+    #[test]
+    fn round_trips_generated_bench_ppa() {
+        let cfg = crate::config::ArchConfig::j3dai();
+        let em = crate::power::EnergyModel::fdsoi28();
+        let r = crate::sim::simulate(&crate::models::paper_mbv1(), &cfg).unwrap();
+        let text = super::super::bench_ppa_json(&cfg, &[super::super::ppa_entry(&r, &em)]);
+        let f = parse_bench_ppa("gen", &text).unwrap();
+        assert_eq!(f.models[0].model, "mbv1_1_1");
+        // identical snapshots never regress, even at zero tolerance
+        let thr = CompareThresholds { latency_pct: 0.0, power_pct: 0.0, tops_w_pct: 0.0 };
+        let cmp = compare(&[f.clone(), f], &thr).unwrap();
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+    }
+}

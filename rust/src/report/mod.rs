@@ -4,9 +4,13 @@
 //! machine-readable `BENCH_telemetry.json` / `BENCH_ppa.json` files.
 
 use crate::config::ArchConfig;
+use crate::graph::Graph;
 use crate::power::{area, EnergyModel};
 use crate::sim::{SimResult, SimTrace};
-use crate::telemetry::{self, json};
+use crate::telemetry::pmu::{PmuBank, STALL_REASONS};
+use crate::telemetry::{self, json, EnergyBreakdown};
+
+pub mod compare;
 
 fn opt_json(v: Option<f64>) -> String {
     v.map(json::fmt_f64).unwrap_or_else(|| "null".into())
@@ -233,7 +237,7 @@ pub fn render_layer_table(tr: &SimTrace) -> String {
         tr.layers.len()
     );
     s.push_str(&format!(
-        "{:<4} {:<16} {:>10} {:>10} {:>10} {:>10} {:>12} {:>12} {:>9} {:>9} {:>8}\n",
+        "{:<4} {:<16} {:>10} {:>10} {:>10} {:>10} {:>12} {:>12} {:>9} {:>9} {:>8} {:>18}\n",
         "#",
         "Layer",
         "Cycles",
@@ -244,13 +248,15 @@ pub fn render_layer_table(tr: &SimTrace) -> String {
         "Bytes",
         "Eff %",
         "E mJ",
-        "MACs/B"
+        "MACs/B",
+        "Top stall"
     ));
     let (mut cyc, mut stall, mut macs, mut bytes) = (0u64, 0u64, 0u64, 0u64);
     let mut energy = 0.0f64;
     for l in &tr.layers {
         s.push_str(&format!(
-            "{:<4} {:<16} {:>10} {:>10} {:>10} {:>10} {:>12} {:>12} {:>9.1} {:>9.4} {:>8.1}\n",
+            "{:<4} {:<16} {:>10} {:>10} {:>10} {:>10} {:>12} {:>12} {:>9.1} {:>9.4} {:>8.1} \
+             {:>18}\n",
             l.layer,
             l.name,
             l.cycles,
@@ -261,7 +267,8 @@ pub fn render_layer_table(tr: &SimTrace) -> String {
             l.bytes,
             l.mac_efficiency * 100.0,
             l.energy_mj,
-            l.arith_intensity
+            l.arith_intensity,
+            stall_mix(&l.stall_breakdown)
         ));
         cyc += l.cycles;
         stall += l.stall_cycles;
@@ -272,6 +279,93 @@ pub fn render_layer_table(tr: &SimTrace) -> String {
     s.push_str(&format!(
         "{:<4} {:<16} {:>10} {:>10} {:>10} {:>10} {:>12} {:>12} {:>9} {:>9.4}\n",
         "", "total", cyc, "", "", stall, macs, bytes, "", energy
+    ));
+    s
+}
+
+/// "reason pct%" summary of a stall-cycle array (the dominant reason), or
+/// "-" when nothing stalled.
+fn stall_mix(stalls: &[u64]) -> String {
+    let total: u64 = stalls.iter().sum();
+    if total == 0 {
+        return "-".into();
+    }
+    let (i, top) = stalls.iter().enumerate().max_by_key(|(_, v)| **v).unwrap();
+    format!("{} {:.0}%", STALL_REASONS[i].label(), *top as f64 / total as f64 * 100.0)
+}
+
+/// Per-layer PMU stall attribution plus the per-cluster accounting proof:
+/// every simulated cycle is busy, control, or a classified stall — the
+/// `j3dai sim` command prints this below the per-model summary.
+pub fn render_stall_table(g: &Graph, r: &SimResult) -> String {
+    // sum the per-layer banks across clusters
+    let mut layers: std::collections::BTreeMap<u32, PmuBank> = std::collections::BTreeMap::new();
+    for c in &r.clusters {
+        for (li, bank) in &c.pmu.per_layer {
+            layers.entry(*li).or_default().merge(bank);
+        }
+    }
+    let mut s = format!("Stall attribution — {} ({} clusters)\n", r.model, r.clusters.len());
+    s.push_str(&format!(
+        "{:<4} {:<16} {:>10} {:>8} {:>10} {:>10} {:>10} {:>13}\n",
+        "#", "Layer", "Busy", "Ctrl", "dma_wait", "ncb_arb", "l2_bank", "weight_refill"
+    ));
+    let mut total = PmuBank::default();
+    for (li, bank) in &layers {
+        let name = g.layers.get(*li as usize).map(|l| l.name.as_str()).unwrap_or("setup");
+        let st = bank.stalls;
+        s.push_str(&format!(
+            "{:<4} {:<16} {:>10} {:>8} {:>10} {:>10} {:>10} {:>13}\n",
+            li, name, bank.busy, bank.ctrl, st[0], st[1], st[2], st[3]
+        ));
+        total.merge(bank);
+    }
+    let ts = total.stalls;
+    s.push_str(&format!(
+        "{:<4} {:<16} {:>10} {:>8} {:>10} {:>10} {:>10} {:>13}\n",
+        "", "total", total.busy, total.ctrl, ts[0], ts[1], ts[2], ts[3]
+    ));
+    // per-cluster accounting: busy + ctrl + classified stalls (including
+    // the system-level host_sync fold) must cover every simulated cycle
+    for (ci, c) in r.clusters.iter().enumerate() {
+        let b = &c.pmu.total;
+        let ok = if b.accounted() == r.cycles { "OK" } else { "MISMATCH" };
+        s.push_str(&format!("cluster {ci}: busy {} ctrl {}", b.busy, b.ctrl));
+        for (reason, v) in STALL_REASONS.iter().zip(b.stalls) {
+            s.push_str(&format!(" {} {}", reason.label(), v));
+        }
+        s.push_str(&format!(" -> {} of {} [{}]\n", b.accounted(), r.cycles, ok));
+    }
+    s
+}
+
+/// Per-cluster utilization/stall/energy summary of one simulated inference
+/// — the per-cluster energy split next to the PMU view.
+pub fn render_cluster_table(r: &SimResult, em: &EnergyModel) -> String {
+    let mut s = format!("Per-cluster breakdown — {} ({} cycles)\n", r.model, r.cycles);
+    s.push_str(&format!(
+        "{:<8} {:>10} {:>10} {:>10} {:>7} {:>10} {:>20} {:>9}\n",
+        "Cluster", "Cycles", "Comp busy", "Xfer busy", "Util %", "Stall", "Top stall", "E mJ"
+    ));
+    let mut energy = 0.0f64;
+    for (ci, c) in r.clusters.iter().enumerate() {
+        let mj = EnergyBreakdown::from_activity(em, &c.activity).total_mj();
+        energy += mj;
+        s.push_str(&format!(
+            "{:<8} {:>10} {:>10} {:>10} {:>7.1} {:>10} {:>20} {:>9.4}\n",
+            ci,
+            c.cycles,
+            c.compute_busy,
+            c.xfer_busy,
+            c.compute_busy as f64 / r.cycles as f64 * 100.0,
+            c.pmu.total.stall_total(),
+            stall_mix(&c.pmu.total.stalls),
+            mj
+        ));
+    }
+    s.push_str(&format!(
+        "{:<8} {:>10} {:>10} {:>10} {:>7} {:>10} {:>20} {:>9.4}\n",
+        "total", r.cycles, "", "", "", "", "", energy
     ));
     s
 }
@@ -385,6 +479,141 @@ pub fn render_roofline(tr: &SimTrace, cfg: &ArchConfig) -> String {
         mem_bound,
         pts.len()
     ));
+    s
+}
+
+/// Hand-written, dependency-free roofline SVG: log-log axes with decade
+/// gridlines, the flat peak-MAC roof, the DMPA and DMA bandwidth slopes,
+/// and one circle per layer with memory-bound layers highlighted
+/// (`j3dai roofline --svg-out`).
+pub fn roofline_svg(tr: &SimTrace, cfg: &ArchConfig) -> String {
+    let peak = cfg.peak_gops();
+    let pts = roofline_points(tr, cfg);
+    let (w, h) = (800.0, 520.0);
+    let (ml, mr, mt, mb) = (70.0, 25.0, 35.0, 55.0);
+    let (pw, ph) = (w - ml - mr, h - mt - mb);
+
+    // whole-decade log ranges covering every layer point and both ridges
+    let mut xmax = peak / (2.0 * dma_bw_gbs(cfg));
+    let mut xmin = 0.1f64;
+    let mut ymin = peak;
+    for p in &pts {
+        xmin = xmin.min(p.intensity.max(1e-2));
+        xmax = xmax.max(p.intensity);
+        ymin = ymin.min(p.achieved_gops.max(1e-2));
+    }
+    let x0 = xmin.log10().floor();
+    let x1 = xmax.log10().ceil().max(x0 + 1.0);
+    let y0 = ymin.log10().floor();
+    let y1 = peak.log10().ceil().max(y0 + 1.0);
+    let sx = |x: f64| ml + (x.max(1e-12).log10() - x0) / (x1 - x0) * pw;
+    let sy = |y: f64| mt + ph - (y.max(1e-12).log10() - y0) / (y1 - y0) * ph;
+
+    let mut s = format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{w}\" height=\"{h}\" \
+         viewBox=\"0 0 {w} {h}\" font-family=\"monospace\" font-size=\"12\">\n"
+    );
+    s.push_str("<rect width=\"100%\" height=\"100%\" fill=\"white\"/>\n");
+    s.push_str(&format!(
+        "<text x=\"{ml}\" y=\"20\" font-size=\"14\">Roofline — {} (peak {:.1} GOPS)</text>\n",
+        tr.model, peak
+    ));
+
+    // decade gridlines + tick labels
+    for d in (x0 as i32)..=(x1 as i32) {
+        let v = 10f64.powi(d);
+        let x = sx(v);
+        s.push_str(&format!(
+            "<line x1=\"{x:.1}\" y1=\"{mt}\" x2=\"{x:.1}\" y2=\"{:.1}\" stroke=\"#ddd\"/>\n",
+            mt + ph
+        ));
+        s.push_str(&format!(
+            "<text x=\"{x:.1}\" y=\"{:.1}\" text-anchor=\"middle\">{v}</text>\n",
+            mt + ph + 18.0
+        ));
+    }
+    for d in (y0 as i32)..=(y1 as i32) {
+        let v = 10f64.powi(d);
+        let y = sy(v);
+        s.push_str(&format!(
+            "<line x1=\"{ml}\" y1=\"{y:.1}\" x2=\"{:.1}\" y2=\"{y:.1}\" stroke=\"#ddd\"/>\n",
+            ml + pw
+        ));
+        s.push_str(&format!(
+            "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"end\">{v}</text>\n",
+            ml - 6.0,
+            y + 4.0
+        ));
+    }
+    s.push_str(&format!(
+        "<text x=\"{:.1}\" y=\"{:.1}\" text-anchor=\"middle\">arithmetic intensity \
+         [MACs/byte]</text>\n",
+        ml + pw / 2.0,
+        h - 12.0
+    ));
+    s.push_str(&format!(
+        "<text x=\"18\" y=\"{:.1}\" transform=\"rotate(-90 18 {:.1})\" \
+         text-anchor=\"middle\">achieved [GOPS]</text>\n",
+        mt + ph / 2.0,
+        mt + ph / 2.0
+    ));
+
+    // flat peak roof across the plot, then one slope per bandwidth ceiling
+    s.push_str(&format!(
+        "<line x1=\"{ml}\" y1=\"{:.1}\" x2=\"{:.1}\" y2=\"{:.1}\" stroke=\"#333\" \
+         stroke-width=\"1.5\"/>\n",
+        sy(peak),
+        ml + pw,
+        sy(peak)
+    ));
+    let slopes = [(dmpa_bw_gbs(cfg), "#2ca02c", "DMPA"), (dma_bw_gbs(cfg), "#9467bd", "DMA")];
+    for (bw, color, label) in slopes {
+        // clip the slope's start so it enters the plot at the bottom decade
+        let xl = 10f64.powf(x0).max(10f64.powf(y0) / (2.0 * bw));
+        let ridge = (peak / (2.0 * bw)).max(xl);
+        s.push_str(&format!(
+            "<line x1=\"{:.1}\" y1=\"{:.1}\" x2=\"{:.1}\" y2=\"{:.1}\" stroke=\"{}\" \
+             stroke-width=\"1.5\"/>\n",
+            sx(xl),
+            sy((2.0 * xl * bw).min(peak)),
+            sx(ridge),
+            sy(peak),
+            color
+        ));
+        s.push_str(&format!(
+            "<text x=\"{:.1}\" y=\"{:.1}\" fill=\"{}\">{} {:.1} GB/s</text>\n",
+            sx(ridge) + 4.0,
+            sy(peak) + 14.0,
+            color,
+            label,
+            bw
+        ));
+    }
+
+    // one circle per layer, hover title with the numbers behind it
+    for p in &pts {
+        let fill = if p.memory_bound { "#d62728" } else { "#1f77b4" };
+        let bound = if p.memory_bound { "memory-bound" } else { "compute-bound" };
+        s.push_str(&format!(
+            "<circle cx=\"{:.1}\" cy=\"{:.1}\" r=\"5\" fill=\"{}\" fill-opacity=\"0.8\">\
+             <title>{}: {:.1} MACs/B, {:.1} GOPS ({})</title></circle>\n",
+            sx(p.intensity.max(1e-2)),
+            sy(p.achieved_gops.max(1e-2)),
+            fill,
+            p.name,
+            p.intensity,
+            p.achieved_gops,
+            bound
+        ));
+    }
+
+    // legend
+    let lx = ml + pw - 170.0;
+    s.push_str(&format!("<circle cx=\"{lx:.1}\" cy=\"48\" r=\"5\" fill=\"#d62728\"/>\n"));
+    s.push_str(&format!("<text x=\"{:.1}\" y=\"52\">memory-bound</text>\n", lx + 10.0));
+    s.push_str(&format!("<circle cx=\"{lx:.1}\" cy=\"66\" r=\"5\" fill=\"#1f77b4\"/>\n"));
+    s.push_str(&format!("<text x=\"{:.1}\" y=\"70\">compute-bound</text>\n", lx + 10.0));
+    s.push_str("</svg>\n");
     s
 }
 
@@ -552,6 +781,40 @@ mod tests {
         let t = render_layer_table(&tr);
         assert!(t.contains("E mJ"), "{t}");
         assert!(t.contains("MACs/B"), "{t}");
+        assert!(t.contains("Top stall"), "{t}");
+    }
+
+    #[test]
+    fn stall_and_cluster_tables_account_for_cycles() {
+        let g = crate::models::tinycnn(crate::graph::Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        let em = EnergyModel::fdsoi28();
+        let r = crate::sim::simulate(&g, &cfg).unwrap();
+        let t = render_stall_table(&g, &r);
+        assert!(t.contains("weight_refill"), "{t}");
+        // every cluster's accounting line must close: busy+ctrl+stalls==cycles
+        assert_eq!(t.matches("[OK]").count(), cfg.clusters, "{t}");
+        assert!(!t.contains("MISMATCH"), "{t}");
+        let ct = render_cluster_table(&r, &em);
+        assert!(ct.contains("Top stall"), "{ct}");
+        assert!(ct.contains("E mJ"), "{ct}");
+        assert!(ct.contains("total"), "{ct}");
+    }
+
+    #[test]
+    fn roofline_svg_draws_layers_and_ceilings() {
+        let g = crate::models::tinycnn(crate::graph::Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        let (_, tr) = crate::sim::simulate_traced(&g, &cfg).unwrap();
+        let svg = roofline_svg(&tr, &cfg);
+        assert!(svg.starts_with("<svg "), "{svg}");
+        assert!(svg.ends_with("</svg>\n"));
+        // one circle per layer plus the two legend dots
+        assert_eq!(svg.matches("<circle").count(), tr.layers.len() + 2, "{svg}");
+        assert!(svg.contains("DMPA 25.6 GB/s"), "{svg}");
+        assert!(svg.contains("DMA 1.6 GB/s"), "{svg}");
+        assert!(svg.contains("memory-bound"));
+        assert_eq!(svg.matches("<title>").count(), tr.layers.len());
     }
 
     #[test]

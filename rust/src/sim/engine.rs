@@ -10,9 +10,10 @@
 use crate::config::ArchConfig;
 use crate::isa::{Instr, Program};
 use crate::power::Activity;
+use crate::telemetry::pmu::{PmuCounters, StallReason};
 
 /// Result of running one cluster program.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ClusterRun {
     /// Cycle at which the cluster halted.
     pub cycles: u64,
@@ -22,6 +23,10 @@ pub struct ClusterRun {
     pub compute_busy: u64,
     /// Cycles the transfer engine was busy.
     pub xfer_busy: u64,
+    /// PMU counter bank: every cycle classified as busy, control or one of
+    /// the stall reasons. Invariant (up to system-level `HostSync` added
+    /// later): `pmu.total.accounted() == cycles`.
+    pub pmu: PmuCounters,
 }
 
 /// Cycle cost of a compute instruction on this architecture.
@@ -110,6 +115,35 @@ impl SpanSink for Vec<InstrSpan> {
     }
 }
 
+/// One transfer-timeline interval tagged with the stall reason a compute
+/// engine waiting on it reports, and the layer that issued the transfer.
+struct XferSeg {
+    start: u64,
+    end: u64,
+    reason: StallReason,
+    layer: u32,
+}
+
+fn push_seg(segs: &mut Vec<XferSeg>, start: u64, end: u64, reason: StallReason, layer: u32) {
+    if end > start {
+        segs.push(XferSeg { start, end, reason, layer });
+    }
+}
+
+/// Attribute the compute-idle window `[gap_start, gap_end)` to the stall
+/// reasons of the transfer segments that cover it. Segments tile the
+/// transfer timeline densely since the last sync, so the gap — which
+/// starts at or after that sync — is always fully covered.
+fn attribute_gap(pmu: &mut PmuCounters, segs: &[XferSeg], gap_start: u64, gap_end: u64) {
+    for seg in segs {
+        let s = seg.start.max(gap_start);
+        let e = seg.end.min(gap_end);
+        if e > s {
+            pmu.stall(seg.layer, seg.reason, e - s);
+        }
+    }
+}
+
 fn run_cluster_impl<S: SpanSink>(
     cfg: &ArchConfig,
     prog: &Program,
@@ -122,10 +156,18 @@ fn run_cluster_impl<S: SpanSink>(
     let mut compute_busy = 0u64;
     let mut xfer_busy = 0u64;
     let mut cur_layer = u32::MAX;
+    let mut pmu = PmuCounters::default();
+    // transfer segments since the last sync — the PMU classifies compute
+    // wait cycles by intersecting the wait window with these
+    let mut segs: Vec<XferSeg> = Vec::new();
 
     for i in &prog.instrs {
         match i {
             Instr::Sync => {
+                if comp_t < xfer_t {
+                    attribute_gap(&mut pmu, &segs, comp_t, xfer_t);
+                }
+                segs.clear();
                 let t = xfer_t.max(comp_t);
                 xfer_t = t;
                 comp_t = t;
@@ -135,11 +177,32 @@ fn run_cluster_impl<S: SpanSink>(
             Instr::AiuLoop { .. } => {
                 // loop setup rides the control path: one cycle on compute
                 comp_t += 1;
+                pmu.ctrl(cur_layer, 1);
             }
             _ if i.engine() == crate::isa::Engine::Xfer => {
                 let is_dma = matches!(i, Instr::DmaLoad { .. } | Instr::DmaStore { .. });
                 let dur = xfer_cycles(cfg, i) * if is_dma { dma_penalty } else { 1 };
                 let bytes = i.xfer_bytes();
+                if is_dma {
+                    // bus-arbitration share first (the penalty models the
+                    // serialized shared bus), then the descriptor itself
+                    let base = xfer_cycles(cfg, i);
+                    let arb = (dma_penalty - 1) * base;
+                    push_seg(&mut segs, xfer_t, xfer_t + arb, StallReason::NcbArb, cur_layer);
+                    push_seg(&mut segs, xfer_t + arb, xfer_t + dur, StallReason::DmaWait, cur_layer);
+                } else {
+                    // DMPA: setup beats resolve L2 block conflicts, the
+                    // remaining beats stream into the NCB weight buffer
+                    let setup = cfg.dmpa_setup_cycles.min(dur);
+                    push_seg(&mut segs, xfer_t, xfer_t + setup, StallReason::L2Bank, cur_layer);
+                    push_seg(
+                        &mut segs,
+                        xfer_t + setup,
+                        xfer_t + dur,
+                        StallReason::WeightRefill,
+                        cur_layer,
+                    );
+                }
                 // per-instruction delta: the span carries it so the energy
                 // model can attribute joules span-by-span
                 let mut d = Activity { cycles: dur, ..Activity::default() };
@@ -205,14 +268,20 @@ fn run_cluster_impl<S: SpanSink>(
                 }
                 comp_t += dur;
                 compute_busy += dur;
+                pmu.busy(cur_layer, dur);
                 act.merge_sequential(&d);
             }
         }
     }
+    // final wait: the transfer engine outlives the last compute op (a halt
+    // without a trailing sync) — classify those cycles too
+    if comp_t < xfer_t {
+        attribute_gap(&mut pmu, &segs, comp_t, xfer_t);
+    }
     let cycles = xfer_t.max(comp_t);
     act.cycles = cycles;
     act.busy_cluster_cycles = compute_busy.max(xfer_busy);
-    ClusterRun { cycles, activity: act, compute_busy, xfer_busy }
+    ClusterRun { cycles, activity: act, compute_busy, xfer_busy, pmu }
 }
 
 /// Run one program; `dma_penalty` multiplies DMA cycles (shared-bus
@@ -439,6 +508,64 @@ mod tests {
         marked.instrs.truncate(1);
         let bytes = marked.assemble();
         assert_eq!(Program::disassemble(&bytes).unwrap().instrs, marked.instrs);
+    }
+
+    #[test]
+    fn pmu_accounts_every_cycle() {
+        let c = cfg();
+        let prog = two_tile_program();
+        let r = run_cluster(&c, &prog, 1);
+        assert_eq!(r.pmu.total.accounted(), r.cycles, "busy+ctrl+stalls must equal cycles");
+        assert_eq!(r.pmu.total.busy, r.compute_busy);
+        // engine-level attribution never produces host_sync (system adds it)
+        assert_eq!(r.pmu.total.stalls[crate::telemetry::StallReason::HostSync.index()], 0);
+        // per-layer banks partition the total
+        let per: u64 = r.pmu.per_layer.values().map(|b| b.accounted()).sum();
+        assert_eq!(per, r.pmu.total.accounted());
+        assert_eq!(r.pmu.per_layer.len(), 2);
+        // a DMPA-fed program stalls on weight refill / L2 setup, not DMA
+        assert!(r.pmu.total.stalls[crate::telemetry::StallReason::WeightRefill.index()] > 0);
+        assert_eq!(r.pmu.total.stalls[crate::telemetry::StallReason::DmaWait.index()], 0);
+    }
+
+    #[test]
+    fn pmu_splits_dma_wait_from_arbitration() {
+        let c = cfg();
+        let load = Instr::DmaLoad { src: Space::L2Bottom, src_addr: 0, dst_addr: 0, bytes: 4096 };
+        let prog = Program { instrs: vec![load.clone(), Instr::Halt] };
+        let base = xfer_cycles(&c, &load);
+
+        let r1 = run_cluster(&c, &prog, 1);
+        assert_eq!(r1.pmu.total.stalls[crate::telemetry::StallReason::DmaWait.index()], base);
+        assert_eq!(r1.pmu.total.stalls[crate::telemetry::StallReason::NcbArb.index()], 0);
+        assert_eq!(r1.pmu.total.accounted(), r1.cycles);
+
+        let r6 = run_cluster(&c, &prog, 6);
+        assert_eq!(r6.pmu.total.stalls[crate::telemetry::StallReason::DmaWait.index()], base);
+        assert_eq!(r6.pmu.total.stalls[crate::telemetry::StallReason::NcbArb.index()], 5 * base);
+        assert_eq!(r6.pmu.total.accounted(), r6.cycles);
+    }
+
+    #[test]
+    fn pmu_overlapped_compute_hides_transfer_stalls() {
+        let c = cfg();
+        // transfer shorter than the overlapped compute: zero stall cycles
+        let load = Instr::DmpaLoad { src: Space::L2Bottom, src_addr: 0, dst_addr: 0, bytes: 1280 };
+        let conv = Instr::ConvTile { m: 2, k: 200, n: 64, first: true, last: true };
+        assert!(xfer_cycles(&c, &load) < compute_cycles(&c, &conv));
+        let prog = Program { instrs: vec![load, conv, Instr::Sync, Instr::Halt] };
+        let r = run_cluster(&c, &prog, 1);
+        assert_eq!(r.pmu.total.stall_total(), 0);
+        assert_eq!(r.pmu.total.accounted(), r.cycles);
+    }
+
+    #[test]
+    fn pmu_identical_between_traced_and_untraced() {
+        let c = cfg();
+        let prog = two_tile_program();
+        let plain = run_cluster(&c, &prog, 1);
+        let (traced, _) = run_cluster_traced(&c, &prog, 1);
+        assert_eq!(plain.pmu, traced.pmu);
     }
 
     #[test]

@@ -19,6 +19,9 @@ pub struct L2Memory {
     traffic: Vec<u64>,
     /// bytes that crossed the TSVs (middle-partition accesses)
     pub tsv_bytes: u64,
+    /// DMPA beats that hit a block more than once per word slot
+    /// (the PMU's `l2_bank` stall reason at the functional level)
+    conflict_beats: u64,
 }
 
 impl L2Memory {
@@ -29,6 +32,7 @@ impl L2Memory {
             blocks: cfg.l2_blocks,
             traffic: vec![0; cfg.l2_blocks],
             tsv_bytes: 0,
+            conflict_beats: 0,
         }
     }
 
@@ -80,6 +84,23 @@ impl L2Memory {
     pub fn dmpa_beat_conflict_free(&self, addr: usize) -> bool {
         // aligned 128-byte beats touch blocks 0..16 exactly once each
         addr % 8 == 0
+    }
+
+    /// Account a DMPA column stream of `len` bytes starting at `addr`:
+    /// returns the number of conflicted beats and accumulates them into the
+    /// cumulative [`Self::conflict_beats`] counter. Unaligned streams pay a
+    /// block-port collision on every 128-byte beat — the functional-model
+    /// counterpart of the cycle engine's `l2_bank` PMU stall reason.
+    pub fn account_dmpa_stream(&mut self, addr: usize, len: usize) -> u64 {
+        let beats = (len as u64).div_ceil(128);
+        let conflicts = if self.dmpa_beat_conflict_free(addr) { 0 } else { beats };
+        self.conflict_beats += conflicts;
+        conflicts
+    }
+
+    /// Cumulative conflicted DMPA beats across every accounted stream.
+    pub fn conflict_beats(&self) -> u64 {
+        self.conflict_beats
     }
 
     pub fn traffic(&self) -> &[u64] {
@@ -141,6 +162,20 @@ mod tests {
         // straddling write counts only the middle share
         m.write(mid - 10, &[0u8; 30]).unwrap();
         assert_eq!(m.tsv_bytes, 120);
+    }
+
+    #[test]
+    fn dmpa_streams_count_conflicted_beats() {
+        let mut m = l2();
+        // aligned stream: zero conflicts regardless of length
+        assert_eq!(m.account_dmpa_stream(0, 1024), 0);
+        assert_eq!(m.conflict_beats(), 0);
+        // unaligned stream: every 128-byte beat conflicts (300 B -> 3 beats)
+        assert_eq!(m.account_dmpa_stream(3, 300), 3);
+        assert_eq!(m.conflict_beats(), 3);
+        // a second unaligned stream accumulates
+        assert_eq!(m.account_dmpa_stream(9, 128), 1);
+        assert_eq!(m.conflict_beats(), 4);
     }
 
     #[test]

@@ -25,6 +25,6 @@ pub mod system;
 
 pub use engine::{run_cluster_traced, ClusterRun, InstrSpan};
 pub use system::{
-    simulate, simulate_compiled, simulate_compiled_traced, simulate_traced, LayerStats, SimResult,
-    SimTrace,
+    sample_timeseries, simulate, simulate_compiled, simulate_compiled_traced, simulate_traced,
+    LayerStats, SimResult, SimTrace,
 };

@@ -20,12 +20,15 @@ pub struct BankedSram {
     data: Vec<u8>,
     /// read/write event counters per bank (for conflict metrics)
     accesses: Vec<u64>,
+    /// cumulative serialization cycles lost to same-bank collisions in
+    /// parallel bursts (the PMU's bank-conflict taxonomy at NCB level)
+    conflict_cycles: u64,
 }
 
 impl BankedSram {
     pub fn new(bytes: usize, banks: usize) -> Self {
         assert!(banks > 0 && bytes % banks == 0);
-        BankedSram { banks, data: vec![0; bytes], accesses: vec![0; banks] }
+        BankedSram { banks, data: vec![0; bytes], accesses: vec![0; banks], conflict_cycles: 0 }
     }
 
     pub fn capacity(&self) -> usize {
@@ -62,6 +65,27 @@ impl BankedSram {
             per_bank[self.bank_of(a)] += 1;
         }
         per_bank.into_iter().max().unwrap_or(0)
+    }
+
+    /// Service one lanes-wide parallel read burst, bumping the per-bank
+    /// access counters and accumulating the excess serialization cycles
+    /// (cycles beyond the conflict-free single cycle). Returns the burst's
+    /// total cycles. This is the functional-model counterpart of the cycle
+    /// engine's `ncb_arb`/`l2_bank` PMU stall reasons.
+    pub fn service_parallel_read(&mut self, addrs: &[usize]) -> u64 {
+        for &a in addrs {
+            let bank = self.bank_of(a);
+            self.accesses[bank] += 1;
+        }
+        let cycles = self.parallel_read_cycles(addrs);
+        self.conflict_cycles += cycles.saturating_sub(1);
+        cycles
+    }
+
+    /// Cumulative serialization cycles lost to bank conflicts across every
+    /// burst serviced through [`Self::service_parallel_read`].
+    pub fn conflict_cycles(&self) -> u64 {
+        self.conflict_cycles
     }
 
     pub fn accesses(&self) -> &[u64] {
@@ -157,6 +181,22 @@ mod tests {
         assert_eq!(s.parallel_read_cycles(&[0, 4, 8, 12]), 4);
         // mixed: worst bank dominates
         assert_eq!(s.parallel_read_cycles(&[0, 4, 1, 2]), 2);
+    }
+
+    #[test]
+    fn serviced_bursts_accumulate_conflict_cycles() {
+        let mut s = BankedSram::new(64, 4);
+        // conflict-free burst: one cycle, no excess
+        assert_eq!(s.service_parallel_read(&[0, 1, 2, 3]), 1);
+        assert_eq!(s.conflict_cycles(), 0);
+        // fully serialized burst: 4 cycles, 3 of them excess
+        assert_eq!(s.service_parallel_read(&[0, 4, 8, 12]), 4);
+        assert_eq!(s.conflict_cycles(), 3);
+        // partial conflict adds one more excess cycle
+        assert_eq!(s.service_parallel_read(&[0, 4, 1, 2]), 2);
+        assert_eq!(s.conflict_cycles(), 4);
+        // bank-0 access counter saw all the bank-0 addresses above
+        assert_eq!(s.accesses()[0], 6);
     }
 
     #[test]

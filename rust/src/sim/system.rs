@@ -8,7 +8,10 @@ use crate::config::ArchConfig;
 use crate::graph::Graph;
 use crate::isa::Engine;
 use crate::power::{self, Activity, EnergyModel};
-use crate::telemetry::{energy, ArgValue, TraceBuilder, SIM_PID};
+use crate::telemetry::pmu::N_STALL_REASONS;
+use crate::telemetry::{
+    energy, ArgValue, FoldedProfile, RingSampler, StallReason, TraceBuilder, SIM_PID,
+};
 
 /// Full result of simulating one inference.
 #[derive(Debug, Clone)]
@@ -28,6 +31,12 @@ pub struct SimResult {
     pub host_cycles: u64,
     /// Maximum sustainable frame rate.
     pub max_fps: f64,
+    /// Per-cluster runs with their PMU banks. System-level `HostSync`
+    /// cycles (waiting on the slowest cluster + host tail) are folded into
+    /// each cluster's **total** bank, so per cluster
+    /// `pmu.total.accounted() == cycles`; per-layer banks keep only the
+    /// engine-level reasons (no layer owns the post-halt wait).
+    pub clusters: Vec<ClusterRun>,
 }
 
 impl SimResult {
@@ -87,6 +96,14 @@ fn finish(g: &Graph, cfg: &ArchConfig, compiled: &Compiled, runs: &[ClusterRun])
     let cycles = slowest + host_cycles;
     activity.cycles = cycles;
 
+    // fold the system-level wait into each cluster's PMU total: a cluster
+    // that halts early idles until the slowest cluster and the serial host
+    // tail finish — after this, every cluster accounts for all `cycles`
+    let mut clusters = runs.to_vec();
+    for c in &mut clusters {
+        c.pmu.total.stall(StallReason::HostSync, cycles - c.cycles);
+    }
+
     SimResult {
         model: g.name.clone(),
         total_macs: g.total_macs(),
@@ -97,6 +114,7 @@ fn finish(g: &Graph, cfg: &ArchConfig, compiled: &Compiled, runs: &[ClusterRun])
         host_cycles,
         max_fps: power::max_fps(cfg, cycles),
         activity,
+        clusters,
     }
 }
 
@@ -118,6 +136,11 @@ pub struct LayerStats {
     /// Per-cluster extent minus the busier engine, summed — cycles neither
     /// engine could hide behind the other.
     pub stall_cycles: u64,
+    /// PMU classification of this layer's compute-wait cycles, summed over
+    /// clusters, indexed by `StallReason::index()`. A different measure
+    /// than `stall_cycles` (extent-based): the PMU counts cycles the
+    /// compute engine sat waiting on a classified transfer.
+    pub stall_breakdown: [u64; N_STALL_REASONS],
     pub macs: u64,
     /// Bytes moved by transfer instructions.
     pub bytes: u64,
@@ -145,6 +168,9 @@ pub struct SimTrace {
     pub clock_ns: f64,
     pub layers: Vec<LayerStats>,
     pub trace: TraceBuilder,
+    /// Folded `layer;cluster/engine;instruction` stacks (cycle weights)
+    /// for flamegraph tooling (`--profile-out`).
+    pub folded: FoldedProfile,
 }
 
 /// [`simulate`], also producing per-layer stats and a Perfetto-loadable
@@ -203,9 +229,16 @@ fn build_sim_trace(
     tb.name_thread(SIM_PID, layers_tid, "layers");
     tb.name_thread(SIM_PID, host_tid, "host");
 
-    // instruction spans, one track pair per cluster
+    // instruction spans, one track pair per cluster; the same walk feeds
+    // the folded flamegraph stacks
+    let mut folded = FoldedProfile::new();
     for (ci, spans) in cluster_spans.iter().enumerate() {
         for s in spans {
+            let eng = if s.engine == Engine::Xfer { "XFER" } else { "COMPUTE" };
+            folded.add(
+                format!("{};cluster{ci}/{eng};{}", layer_name(g, s.layer), s.label),
+                s.end - s.start,
+            );
             let tid = ci as u32 * 2 + u32::from(s.engine == Engine::Xfer);
             let mut args = vec![
                 ("energy_pj".to_string(), ArgValue::F64(energy::span_energy_pj(&em, &s.activity))),
@@ -262,6 +295,16 @@ fn build_sim_trace(
         if end == 0 {
             continue; // no cycle-consuming instructions anywhere
         }
+        // PMU view: this layer's classified compute-wait cycles, summed
+        // over the per-cluster per-layer banks
+        let mut stall_breakdown = [0u64; N_STALL_REASONS];
+        for run in runs {
+            if let Some(bank) = run.pmu.per_layer.get(&(li as u32)) {
+                for (acc, v) in stall_breakdown.iter_mut().zip(bank.stalls) {
+                    *acc += v;
+                }
+            }
+        }
         let cycles = end - start;
         // the layer's Activity cycle figure is its wall extent, not the
         // sum of span durations across concurrent clusters
@@ -290,6 +333,7 @@ fn build_sim_trace(
             compute_busy: comp,
             xfer_busy: xfer,
             stall_cycles: stall,
+            stall_breakdown,
             macs,
             bytes,
             mac_efficiency: if cycles > 0 {
@@ -320,10 +364,92 @@ fn build_sim_trace(
             us(step.host_cycles),
             Vec::new(),
         );
+        folded.add(format!("host;host;{}", step.layer), step.host_cycles);
         t += step.host_cycles;
     }
 
-    SimTrace { model: g.name.clone(), clock_ns, layers, trace: tb }
+    SimTrace { model: g.name.clone(), clock_ns, layers, trace: tb, folded }
+}
+
+/// Cycle-domain time-series sampling: simulate `g` traced, then bin
+/// per-cluster compute utilization and per-component power into
+/// `interval_cycles` windows pushed through a bounded [`RingSampler`]
+/// (the `sample` CLI subcommand). Series layout:
+/// `cluster{i}_util` per cluster, then `power_mw_total`, then one
+/// `power_mw_{component}` per [`energy::COMPONENTS`] entry.
+pub fn sample_timeseries(
+    g: &Graph,
+    cfg: &ArchConfig,
+    interval_cycles: u64,
+    capacity: usize,
+) -> crate::Result<(SimResult, RingSampler)> {
+    let compiled = compiler::compile(g, cfg)?;
+    let penalty = dma_penalty(cfg);
+    let mut runs = Vec::with_capacity(compiled.cluster_programs.len());
+    let mut cluster_spans = Vec::with_capacity(compiled.cluster_programs.len());
+    for prog in &compiled.cluster_programs {
+        let (run, spans) = run_cluster_traced(cfg, prog, penalty);
+        runs.push(run);
+        cluster_spans.push(spans);
+    }
+    let result = finish(g, cfg, &compiled, &runs);
+
+    let em = EnergyModel::fdsoi28().at_voltage(cfg.voltage, 0.85);
+    let iv = interval_cycles.max(1);
+    let n_windows = result.cycles.div_ceil(iv) as usize;
+    let nclusters = cluster_spans.len();
+    let mut series: Vec<String> = (0..nclusters).map(|ci| format!("cluster{ci}_util")).collect();
+    series.push("power_mw_total".to_string());
+    for c in energy::COMPONENTS {
+        series.push(format!("power_mw_{c}"));
+    }
+
+    // distribute each span's busy cycles and energy across the windows it
+    // overlaps — O(spans + windows), no per-cycle walk
+    let mut busy = vec![vec![0u64; n_windows]; nclusters];
+    let mut comp_mj = vec![[0f64; energy::COMPONENTS.len()]; n_windows];
+    for (ci, spans) in cluster_spans.iter().enumerate() {
+        for s in spans {
+            if s.end == s.start {
+                continue;
+            }
+            let comps = energy::EnergyBreakdown::from_activity(&em, &s.activity).components();
+            let dur = (s.end - s.start) as f64;
+            let mut w = (s.start / iv) as usize;
+            let mut pos = s.start;
+            while pos < s.end {
+                let wend = (w as u64 + 1) * iv;
+                let take = s.end.min(wend) - pos;
+                if s.engine == Engine::Compute {
+                    busy[ci][w] += take;
+                }
+                let frac = take as f64 / dur;
+                for (acc, (_, mj)) in comp_mj[w].iter_mut().zip(comps) {
+                    *acc += mj * frac;
+                }
+                pos += take;
+                w += 1;
+            }
+        }
+    }
+
+    let mut sampler = RingSampler::new(iv as f64, capacity, series);
+    for (w, comp) in comp_mj.iter().enumerate() {
+        let wstart = w as u64 * iv;
+        let wlen = (result.cycles - wstart).min(iv);
+        let wms = wlen as f64 * cfg.clock_ns() * 1e-6;
+        let mut v = Vec::with_capacity(nclusters + 1 + energy::COMPONENTS.len());
+        for b in &busy {
+            v.push(b[w] as f64 / wlen as f64);
+        }
+        let total: f64 = comp.iter().sum();
+        v.push(total / wms);
+        for mj in comp {
+            v.push(mj / wms);
+        }
+        sampler.push(wstart as f64, v);
+    }
+    Ok((result, sampler))
 }
 
 #[cfg(test)]
@@ -469,6 +595,78 @@ mod tests {
             .iter()
             .filter(|e| e.tid == layers_tid)
             .all(|e| e.args.iter().any(|(k, _)| k == "energy_pj")));
+    }
+
+    #[test]
+    fn cluster_pmu_accounts_for_total_cycles() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let r = simulate(&g, &ArchConfig::j3dai()).unwrap();
+        assert!(!r.clusters.is_empty());
+        for (ci, c) in r.clusters.iter().enumerate() {
+            assert_eq!(
+                c.pmu.total.accounted(),
+                r.cycles,
+                "cluster {ci}: busy+ctrl+stalls must cover the whole inference"
+            );
+        }
+        // at least one cluster halts before the end-to-end cycle count
+        // (host tail), so host_sync shows up
+        let hs = StallReason::HostSync.index();
+        assert!(r.clusters.iter().any(|c| c.pmu.total.stalls[hs] > 0));
+    }
+
+    #[test]
+    fn folded_profile_covers_engine_busy_and_host() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        let (r, tr) = simulate_traced(&g, &cfg).unwrap();
+        assert!(!tr.folded.is_empty());
+        // stack weights = all span cycles + the host tail
+        let busy: u64 = r.clusters.iter().map(|c| c.compute_busy + c.xfer_busy).sum();
+        assert_eq!(tr.folded.total_weight(), busy + r.host_cycles);
+        for (stack, w) in tr.folded.iter() {
+            assert_eq!(stack.matches(';').count(), 2, "{stack}");
+            assert!(w > 0);
+        }
+    }
+
+    #[test]
+    fn sample_timeseries_bins_utilization_and_power() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        let (r, sampler) = sample_timeseries(&g, &cfg, 256, 1 << 20).unwrap();
+        assert_eq!(sampler.series().len(), cfg.clusters + 1 + energy::COMPONENTS.len());
+        assert_eq!(sampler.len() as u64, r.cycles.div_ceil(256));
+        assert_eq!(sampler.dropped(), 0);
+        let mut total_mj = 0.0;
+        for s in sampler.samples() {
+            for (name, v) in sampler.series().iter().zip(&s.v) {
+                assert!(v.is_finite(), "{name}={v}");
+                if name.ends_with("_util") {
+                    assert!((0.0..=1.0 + 1e-9).contains(v), "{name}={v}");
+                } else {
+                    assert!(*v >= 0.0, "{name}={v}");
+                }
+            }
+            // window mJ = power_mw * window_ms; reconstruct the total
+            let wlen = (r.cycles - s.t as u64).min(256);
+            total_mj += s.v[cfg.clusters] * wlen as f64 * cfg.clock_ns() * 1e-6;
+        }
+        // energy binned into windows matches the span-attributed total
+        let span_mj: f64 = {
+            let (_, tr) = simulate_traced(&g, &cfg).unwrap();
+            tr.trace
+                .events
+                .iter()
+                .filter(|e| e.tid < cfg.clusters as u32 * 2)
+                .filter_map(|e| e.args.iter().find(|(k, _)| k == "energy_pj"))
+                .map(|(_, v)| v.as_f64().unwrap_or(0.0) * 1e-9)
+                .sum()
+        };
+        assert!(
+            (total_mj - span_mj).abs() < 1e-6 * span_mj.max(1.0),
+            "windows={total_mj} spans={span_mj}"
+        );
     }
 
     #[test]

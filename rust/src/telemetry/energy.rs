@@ -177,6 +177,44 @@ impl EnergyMetrics {
     }
 }
 
+/// Per-cluster energy series: `j3dai_energy_mj_total{cluster="i",...}`.
+/// The same base name as the crate-wide total, split by a `cluster` label
+/// — the labeled series sum back to the per-model total because the
+/// cluster Activities partition the inference's event counts.
+pub struct ClusterEnergyMetrics {
+    per_cluster: Vec<FCounter>,
+}
+
+impl ClusterEnergyMetrics {
+    /// Get-or-create one series per cluster for `model`.
+    pub fn register(reg: &Registry, model: &str, clusters: usize) -> Self {
+        let per_cluster = (0..clusters)
+            .map(|ci| {
+                let cl = ci.to_string();
+                reg.fcounter_with(
+                    "j3dai_energy_mj_total",
+                    &[("cluster", cl.as_str()), ("model", model)],
+                    "Modeled accelerator energy spent on inferences (mJ)",
+                )
+            })
+            .collect();
+        ClusterEnergyMetrics { per_cluster }
+    }
+
+    /// Account one inference from per-cluster Activity profiles
+    /// (index-aligned with the registered clusters).
+    pub fn record_inference(&self, em: &EnergyModel, per_cluster: &[Activity]) {
+        for (handle, a) in self.per_cluster.iter().zip(per_cluster) {
+            handle.add(EnergyBreakdown::from_activity(em, a).total_mj());
+        }
+    }
+
+    /// Sum over all cluster series (test hook).
+    pub fn total_mj(&self) -> f64 {
+        self.per_cluster.iter().map(FCounter::get).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,5 +273,26 @@ mod tests {
         // re-registering returns the same series
         let m2 = EnergyMetrics::register(&reg, "mbv1");
         assert_eq!(m2.total_mj(), m.total_mj());
+    }
+
+    #[test]
+    fn cluster_series_partition_the_model_total() {
+        let reg = Registry::new();
+        let em = EnergyModel::fdsoi28();
+        // two clusters splitting the inference's events evenly
+        let mut half = activity();
+        half.macs /= 2;
+        half.local_sram_bytes /= 2;
+        half.dmpa_bytes /= 2;
+        half.dma_bytes /= 2;
+        half.tsv_bytes /= 2;
+        half.alu_ops /= 2;
+        half.busy_cluster_cycles /= 2;
+        let m = ClusterEnergyMetrics::register(&reg, "mbv1", 2);
+        m.record_inference(&em, &[half, half]);
+        assert!((m.total_mj() - em.inference_mj(&activity())).abs() < 1e-9);
+        let text = reg.render();
+        assert!(text.contains("j3dai_energy_mj_total{cluster=\"0\",model=\"mbv1\"}"), "{text}");
+        assert!(text.contains("j3dai_energy_mj_total{cluster=\"1\",model=\"mbv1\"}"), "{text}");
     }
 }

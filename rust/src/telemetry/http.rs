@@ -18,7 +18,7 @@ use std::time::Duration;
 use super::Telemetry;
 
 /// Routes served by the exporter (also the `/` index body).
-const ROUTES: &str = "/metrics (Prometheus text)\n/trace.json (Chrome trace event JSON)\n/healthz\n";
+const ROUTES: &str = "/metrics (Prometheus text)\n/trace.json (Chrome trace event JSON)\n/timeseries.json (ring-sampler time series)\n/healthz\n";
 
 /// Handle to a running exporter; dropping it stops the accept loop.
 pub struct MetricsServer {
@@ -107,6 +107,7 @@ fn route(path: &str, tel: &Telemetry) -> (&'static str, &'static str, String) {
             tel.render_metrics(),
         ),
         "/trace.json" => ("200 OK", "application/json", tel.export_chrome_json()),
+        "/timeseries.json" => ("200 OK", "application/json", tel.export_timeseries_json()),
         "/healthz" => ("200 OK", "text/plain; charset=utf-8", "ok\n".to_string()),
         "/" => ("200 OK", "text/plain; charset=utf-8", ROUTES.to_string()),
         other => (
@@ -169,6 +170,22 @@ mod tests {
         assert!(status.contains("200"), "{status}");
         let doc = crate::telemetry::json::Json::parse(&body).unwrap();
         assert!(doc.get("traceEvents").is_some());
+
+        // /timeseries.json is valid (empty) JSON before a sampler exists,
+        // and serves the ring contents once one is installed
+        let (status, body) = get(addr, "/timeseries.json");
+        assert!(status.contains("200"), "{status}");
+        assert!(crate::telemetry::json::Json::parse(&body).is_ok(), "{body}");
+        tel.install_sampler(crate::telemetry::RingSampler::new(
+            0.0,
+            4,
+            vec!["fps".into()],
+        ));
+        tel.sample(1.0, vec![30.0]);
+        let (_, body) = get(addr, "/timeseries.json");
+        let doc = crate::telemetry::json::Json::parse(&body).unwrap();
+        let samples = doc.get("samples").and_then(crate::telemetry::json::Json::as_arr).unwrap();
+        assert_eq!(samples.len(), 1);
 
         let (status, _) = get(addr, "/healthz");
         assert!(status.contains("200"));

@@ -86,6 +86,17 @@ impl Gauge {
     }
 }
 
+/// A trace/span id pinned to a histogram observation — rendered in the
+/// OpenMetrics exemplar syntax (`bucket 12 # {trace_id="..."} 0.067`) so a
+/// tail-latency bucket links back to the span that caused it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Exemplar {
+    /// The observed value the exemplar annotates.
+    pub value: f64,
+    /// Identifier of the span/trace that produced the observation.
+    pub trace_id: String,
+}
+
 struct HistogramCore {
     /// Upper bounds of the finite buckets (ascending); the `+Inf` bucket is
     /// implicit as `counts.last()`.
@@ -95,6 +106,11 @@ struct HistogramCore {
     /// Exact running sum of observed values (f64 bits, CAS-updated).
     sum_bits: AtomicU64,
     count: AtomicU64,
+    /// Largest value observed with an exemplar (f64 bits; starts at -inf).
+    /// Read lock-free so non-record-setting observations skip the mutex.
+    exemplar_max_bits: AtomicU64,
+    /// The max-latency exemplar itself (locked only on a new maximum).
+    exemplar: Mutex<Option<Exemplar>>,
 }
 
 /// Fixed-bucket histogram. `sum`/`count` are exact; bucket counts feed the
@@ -112,6 +128,8 @@ impl Histogram {
             counts,
             sum_bits: AtomicU64::new(0f64.to_bits()),
             count: AtomicU64::new(0),
+            exemplar_max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+            exemplar: Mutex::new(None),
         }))
     }
 
@@ -128,6 +146,29 @@ impl Histogram {
                 Err(seen) => cur = seen,
             }
         }
+    }
+
+    /// Observe `v` and keep `trace_id` as the exemplar if `v` is a new
+    /// maximum. The fast path (not a record) is one extra atomic load on
+    /// top of [`Histogram::observe`]; only record-setting observations
+    /// take the exemplar lock.
+    pub fn observe_with_exemplar(&self, v: f64, trace_id: &str) {
+        self.observe(v);
+        let c = &self.0;
+        if v >= f64::from_bits(c.exemplar_max_bits.load(Ordering::Relaxed)) {
+            let mut ex = c.exemplar.lock().unwrap();
+            // re-check under the lock: a racing observer may have stored a
+            // larger value between the load and the lock
+            if ex.as_ref().is_none_or(|e| v >= e.value) {
+                c.exemplar_max_bits.store(v.to_bits(), Ordering::Relaxed);
+                *ex = Some(Exemplar { value: v, trace_id: trace_id.to_string() });
+            }
+        }
+    }
+
+    /// The current max-latency exemplar, if any observation carried one.
+    pub fn exemplar(&self) -> Option<Exemplar> {
+        self.0.exemplar.lock().unwrap().clone()
     }
 
     pub fn count(&self) -> u64 {
@@ -321,6 +362,14 @@ impl Registry {
 
     /// Render the Prometheus text exposition format (spec v0.0.4).
     pub fn render(&self) -> String {
+        self.render_with_exemplars(false)
+    }
+
+    /// Like [`Registry::render`], optionally annotating each histogram's
+    /// max-latency bucket with its exemplar in OpenMetrics syntax
+    /// (`bucket 12 # {trace_id="frame41"} 48021`). Off by default so the
+    /// plain text output stays bit-identical for v0.0.4 scrapers.
+    pub fn render_with_exemplars(&self, exemplars: bool) -> String {
         let m = self.entries.lock().unwrap();
         let mut out = String::new();
         let mut last_base: Option<&str> = None;
@@ -352,22 +401,44 @@ impl Registry {
                 }
                 Metric::Histogram(h) => {
                     let core = &h.0;
+                    let ex = if exemplars { h.exemplar() } else { None };
+                    let ex_idx = ex.as_ref().map(|x| {
+                        core.bounds
+                            .iter()
+                            .position(|b| x.value <= *b)
+                            .unwrap_or(core.bounds.len())
+                    });
+                    let ex_suffix = ex
+                        .as_ref()
+                        .map(|x| {
+                            format!(
+                                " # {{trace_id=\"{}\"}} {}",
+                                json::escape(&x.trace_id),
+                                json::fmt_f64(x.value)
+                            )
+                        })
+                        .unwrap_or_default();
                     let bucket_base = format!("{}_bucket", e.base);
                     let mut cum = 0u64;
                     for (i, b) in core.bounds.iter().enumerate() {
                         cum += core.counts[i].load(Ordering::Relaxed);
                         let le = format!("le=\"{}\"", json::fmt_f64(*b));
+                        let tail = if ex_idx == Some(i) { ex_suffix.as_str() } else { "" };
                         out.push_str(&format!(
-                            "{} {}\n",
+                            "{} {}{}\n",
                             series(&bucket_base, &e.labels, Some(&le)),
-                            cum
+                            cum,
+                            tail
                         ));
                     }
                     cum += core.counts[core.bounds.len()].load(Ordering::Relaxed);
+                    let tail =
+                        if ex_idx == Some(core.bounds.len()) { ex_suffix.as_str() } else { "" };
                     out.push_str(&format!(
-                        "{} {}\n",
+                        "{} {}{}\n",
                         series(&bucket_base, &e.labels, Some("le=\"+Inf\"")),
-                        cum
+                        cum,
+                        tail
                     ));
                     out.push_str(&format!(
                         "{} {}\n",
@@ -399,6 +470,9 @@ pub fn parse_text(text: &str) -> crate::Result<BTreeMap<String, f64>> {
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
+        // an OpenMetrics exemplar (` # {trace_id="..."} v`) annotates the
+        // sample but is not part of its value — strip it before splitting
+        let line = line.split_once(" # ").map_or(line, |(l, _)| l.trim_end());
         // value is the last whitespace-separated token; the series name is
         // everything before it (label values may contain escaped spaces
         // only inside quotes, which split-at-last-space handles)
@@ -548,6 +622,43 @@ mod tests {
         assert_eq!(parsed["svc_us_count"], 3.0);
         // and rendering the parse input again is a fixed point
         assert_eq!(parse_text(&r.render()).unwrap(), parsed);
+    }
+
+    #[test]
+    fn exemplar_tracks_the_maximum_observation() {
+        let r = Registry::new();
+        let h = r.histogram("svc_us", "", &[10.0, 100.0]);
+        h.observe_with_exemplar(50.0, "frame0");
+        h.observe_with_exemplar(7.0, "frame1"); // not a record — ignored
+        let ex = h.exemplar().unwrap();
+        assert_eq!(ex.trace_id, "frame0");
+        assert_eq!(ex.value, 50.0);
+        h.observe_with_exemplar(5000.0, "frame2"); // +Inf bucket record
+        assert_eq!(h.exemplar().unwrap().trace_id, "frame2");
+        // plain observations never disturb the exemplar
+        h.observe(90_000.0);
+        assert_eq!(h.exemplar().unwrap().trace_id, "frame2");
+    }
+
+    #[test]
+    fn exemplars_render_behind_the_flag_only() {
+        let r = Registry::new();
+        let h = r.histogram("svc_us", "", &[10.0, 100.0]);
+        h.observe_with_exemplar(50.0, "frame7");
+        let plain = r.render();
+        assert!(!plain.contains("trace_id"), "{plain}");
+        let with = r.render_with_exemplars(true);
+        let want = "svc_us_bucket{le=\"100\"} 1 # {trace_id=\"frame7\"} 50";
+        assert!(with.contains(want), "{with}");
+        // an over-the-top observation moves the exemplar to the +Inf line
+        h.observe_with_exemplar(5000.0, "frame8");
+        let with = r.render_with_exemplars(true);
+        let want = "svc_us_bucket{le=\"+Inf\"} 2 # {trace_id=\"frame8\"} 5000";
+        assert!(with.contains(want), "{with}");
+        // the annotated text still re-parses to the same sample values
+        let parsed = parse_text(&with).unwrap();
+        assert_eq!(parsed["svc_us_bucket{le=\"+Inf\"}"], 2.0);
+        assert_eq!(parsed["svc_us_count"], 2.0);
     }
 
     #[test]

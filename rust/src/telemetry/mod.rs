@@ -28,11 +28,19 @@ pub mod energy;
 pub mod http;
 pub mod json;
 pub mod metrics;
+pub mod pmu;
+pub mod profile;
+pub mod sampler;
 pub mod trace;
 
-pub use energy::{arithmetic_intensity, span_energy_pj, EnergyBreakdown, EnergyMetrics};
+pub use energy::{
+    arithmetic_intensity, span_energy_pj, ClusterEnergyMetrics, EnergyBreakdown, EnergyMetrics,
+};
 pub use http::MetricsServer;
-pub use metrics::{Counter, FCounter, Gauge, Histogram, Registry};
+pub use metrics::{Counter, Exemplar, FCounter, Gauge, Histogram, Registry};
+pub use pmu::{PmuBank, PmuCounters, StallMetrics, StallReason, N_STALL_REASONS, STALL_REASONS};
+pub use profile::FoldedProfile;
+pub use sampler::RingSampler;
 pub use trace::{ArgValue, TraceBuilder, TraceEvent, COMPILER_PID, FRAME_PID, SIM_PID};
 
 use std::sync::Mutex;
@@ -79,6 +87,7 @@ pub struct Telemetry {
     t0: Instant,
     pub registry: Registry,
     trace: Mutex<TraceBuilder>,
+    sampler: Mutex<Option<RingSampler>>,
 }
 
 impl Default for Telemetry {
@@ -94,6 +103,7 @@ impl Telemetry {
             t0: Instant::now(),
             registry: Registry::new(),
             trace: Mutex::new(TraceBuilder::new()),
+            sampler: Mutex::new(None),
         }
     }
 
@@ -165,6 +175,27 @@ impl Telemetry {
 
     pub fn render_metrics(&self) -> String {
         self.registry.render()
+    }
+
+    /// Attach a time-series ring sampler (replaces any previous one).
+    pub fn install_sampler(&self, s: RingSampler) {
+        *self.sampler.lock().unwrap() = Some(s);
+    }
+
+    /// Push a snapshot into the installed sampler (no-op without one).
+    pub fn sample(&self, t: f64, v: Vec<f64>) {
+        if let Some(s) = self.sampler.lock().unwrap().as_mut() {
+            s.push(t, v);
+        }
+    }
+
+    /// `/timeseries.json` payload: the installed sampler's contents, or a
+    /// valid empty document when no sampler is attached.
+    pub fn export_timeseries_json(&self) -> String {
+        match self.sampler.lock().unwrap().as_ref() {
+            Some(s) => s.to_json(),
+            None => RingSampler::new(0.0, 1, Vec::new()).to_json(),
+        }
     }
 }
 

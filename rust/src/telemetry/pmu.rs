@@ -1,0 +1,260 @@
+//! PMU-style stall attribution for the cycle-level simulator.
+//!
+//! Real edge accelerators expose performance-monitoring counters that
+//! classify every cycle a compute engine is *not* retiring work; the
+//! co-design loop steers on exactly that breakdown (which transfer path
+//! starves which layer). The sim engine reproduces the same visibility:
+//! every cluster carries a [`PmuCounters`] bank and every non-busy
+//! compute cycle is attributed to one [`StallReason`].
+//!
+//! The accounting invariant — checked by tests and rendered by
+//! `report::render_stall_table` — is that per cluster
+//! `busy + ctrl + sum(stalls) == total cycles`.
+
+use std::collections::BTreeMap;
+
+use super::metrics::{Counter, Registry};
+
+/// Why a compute engine spent a cycle idle.
+///
+/// The first four reasons are attributed inside the cluster engine from
+/// the transfer-timeline segment that covered the idle cycle; `HostSync`
+/// is added at system level for cycles where a cluster finished early and
+/// waited for the slowest cluster plus the host orchestration tail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StallReason {
+    /// Waiting on a 64-bit DMA descriptor (base transfer time).
+    DmaWait,
+    /// Extra DMA cycles lost to bus arbitration against other clusters
+    /// (the serialized-DMA penalty when the DMPA is disabled).
+    NcbArb,
+    /// DMPA setup beats: L2 bank/block conflict window before the
+    /// 1024-bit stream reaches full rate.
+    L2Bank,
+    /// DMPA streaming beats refilling the NCB weight buffer (parameter
+    /// refill dominates; activation spill shares the label).
+    WeightRefill,
+    /// Cluster finished its program and waited for the slowest cluster
+    /// and the host orchestration tail.
+    HostSync,
+}
+
+/// Number of stall reasons (array-bank width).
+pub const N_STALL_REASONS: usize = 5;
+
+/// All reasons, in `PmuBank::stalls` index order.
+pub const STALL_REASONS: [StallReason; N_STALL_REASONS] = [
+    StallReason::DmaWait,
+    StallReason::NcbArb,
+    StallReason::L2Bank,
+    StallReason::WeightRefill,
+    StallReason::HostSync,
+];
+
+impl StallReason {
+    /// Index into a `stalls` array bank.
+    pub fn index(self) -> usize {
+        match self {
+            StallReason::DmaWait => 0,
+            StallReason::NcbArb => 1,
+            StallReason::L2Bank => 2,
+            StallReason::WeightRefill => 3,
+            StallReason::HostSync => 4,
+        }
+    }
+
+    /// Stable label used for metric series and report columns.
+    pub fn label(self) -> &'static str {
+        match self {
+            StallReason::DmaWait => "dma_wait",
+            StallReason::NcbArb => "ncb_arb",
+            StallReason::L2Bank => "l2_bank",
+            StallReason::WeightRefill => "weight_refill",
+            StallReason::HostSync => "host_sync",
+        }
+    }
+}
+
+/// One counter bank: busy/control cycles plus one slot per stall reason.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PmuBank {
+    /// Cycles the compute engine retired tile work.
+    pub busy: u64,
+    /// Cycles spent on control-flow instructions (AIU loop bookkeeping).
+    pub ctrl: u64,
+    /// Idle cycles per [`StallReason`] (index via `StallReason::index`).
+    pub stalls: [u64; N_STALL_REASONS],
+}
+
+impl PmuBank {
+    /// Add `cycles` to one stall slot.
+    pub fn stall(&mut self, reason: StallReason, cycles: u64) {
+        self.stalls[reason.index()] += cycles;
+    }
+
+    /// Cycles stalled for any reason.
+    pub fn stall_total(&self) -> u64 {
+        self.stalls.iter().sum()
+    }
+
+    /// Every cycle this bank accounts for.
+    pub fn accounted(&self) -> u64 {
+        self.busy + self.ctrl + self.stall_total()
+    }
+
+    /// Fold another bank into this one.
+    pub fn merge(&mut self, o: &PmuBank) {
+        self.busy += o.busy;
+        self.ctrl += o.ctrl;
+        for (s, v) in self.stalls.iter_mut().zip(o.stalls) {
+            *s += v;
+        }
+    }
+}
+
+/// Per-cluster PMU state: a total bank plus one bank per layer id.
+///
+/// `HostSync` cycles are only folded into `total` (they happen after the
+/// cluster program ended, so no layer owns them); every other event is
+/// recorded in both `total` and the current layer's bank.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PmuCounters {
+    /// Whole-run bank (includes system-level `HostSync`).
+    pub total: PmuBank,
+    /// Per-layer banks keyed by the `layer.mark` id active at the event.
+    pub per_layer: BTreeMap<u32, PmuBank>,
+}
+
+impl PmuCounters {
+    fn layer_bank(&mut self, layer: u32) -> &mut PmuBank {
+        self.per_layer.entry(layer).or_default()
+    }
+
+    /// Record compute-busy cycles for `layer`.
+    pub fn busy(&mut self, layer: u32, cycles: u64) {
+        if cycles == 0 {
+            return;
+        }
+        self.total.busy += cycles;
+        self.layer_bank(layer).busy += cycles;
+    }
+
+    /// Record control-flow cycles for `layer`.
+    pub fn ctrl(&mut self, layer: u32, cycles: u64) {
+        if cycles == 0 {
+            return;
+        }
+        self.total.ctrl += cycles;
+        self.layer_bank(layer).ctrl += cycles;
+    }
+
+    /// Record stalled cycles for `layer`.
+    pub fn stall(&mut self, layer: u32, reason: StallReason, cycles: u64) {
+        if cycles == 0 {
+            return;
+        }
+        self.total.stall(reason, cycles);
+        self.layer_bank(layer).stall(reason, cycles);
+    }
+}
+
+/// Prometheus-side view: `j3dai_stall_cycles_total{cluster,reason}`.
+pub struct StallMetrics {
+    per_cluster: Vec<[Counter; N_STALL_REASONS]>,
+}
+
+impl StallMetrics {
+    /// Register one counter per (cluster, reason) pair.
+    pub fn register(reg: &Registry, model: &str, clusters: usize) -> Self {
+        let per_cluster = (0..clusters)
+            .map(|ci| {
+                let cl = ci.to_string();
+                std::array::from_fn(|ri| {
+                    reg.counter_with(
+                        "j3dai_stall_cycles_total",
+                        &[
+                            ("cluster", cl.as_str()),
+                            ("model", model),
+                            ("reason", STALL_REASONS[ri].label()),
+                        ],
+                        "Simulated compute-idle cycles classified by stall reason",
+                    )
+                })
+            })
+            .collect();
+        StallMetrics { per_cluster }
+    }
+
+    /// Add one inference's worth of stall cycles from per-cluster banks.
+    pub fn record<'a>(&self, banks: impl IntoIterator<Item = &'a PmuCounters>) {
+        for (counters, pmu) in self.per_cluster.iter().zip(banks) {
+            for (c, v) in counters.iter().zip(pmu.total.stalls) {
+                c.add(v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_accounting_adds_up() {
+        let mut pmu = PmuCounters::default();
+        pmu.busy(0, 100);
+        pmu.ctrl(0, 3);
+        pmu.stall(0, StallReason::DmaWait, 10);
+        pmu.stall(1, StallReason::WeightRefill, 7);
+        pmu.busy(1, 50);
+        assert_eq!(pmu.total.accounted(), 170);
+        let per: u64 = pmu.per_layer.values().map(PmuBank::accounted).sum();
+        assert_eq!(per, pmu.total.accounted());
+        assert_eq!(pmu.per_layer[&1].stalls[StallReason::WeightRefill.index()], 7);
+    }
+
+    #[test]
+    fn zero_cycle_events_do_not_create_layer_banks() {
+        let mut pmu = PmuCounters::default();
+        pmu.busy(4, 0);
+        pmu.stall(5, StallReason::L2Bank, 0);
+        assert!(pmu.per_layer.is_empty());
+        assert_eq!(pmu.total.accounted(), 0);
+    }
+
+    #[test]
+    fn merge_folds_every_slot() {
+        let mut a = PmuBank { busy: 1, ctrl: 2, stalls: [1, 2, 3, 4, 5] };
+        let b = PmuBank { busy: 10, ctrl: 20, stalls: [5, 4, 3, 2, 1] };
+        a.merge(&b);
+        assert_eq!(a.busy, 11);
+        assert_eq!(a.ctrl, 22);
+        assert_eq!(a.stalls, [6; N_STALL_REASONS]);
+        assert_eq!(a.accounted(), 63);
+    }
+
+    #[test]
+    fn reason_labels_and_indices_are_consistent() {
+        for (i, r) in STALL_REASONS.iter().enumerate() {
+            assert_eq!(r.index(), i);
+        }
+        let labels: Vec<&str> = STALL_REASONS.iter().map(|r| r.label()).collect();
+        assert_eq!(labels, ["dma_wait", "ncb_arb", "l2_bank", "weight_refill", "host_sync"]);
+    }
+
+    #[test]
+    fn stall_metrics_publish_per_cluster_series() {
+        let reg = Registry::new();
+        let m = StallMetrics::register(&reg, "tiny", 2);
+        let mut pmu0 = PmuCounters::default();
+        pmu0.stall(0, StallReason::DmaWait, 42);
+        let mut pmu1 = PmuCounters::default();
+        pmu1.stall(0, StallReason::HostSync, 7);
+        m.record([&pmu0, &pmu1]);
+        let text = reg.render();
+        let s0 = "j3dai_stall_cycles_total{cluster=\"0\",model=\"tiny\",reason=\"dma_wait\"} 42";
+        let s1 = "j3dai_stall_cycles_total{cluster=\"1\",model=\"tiny\",reason=\"host_sync\"} 7";
+        assert!(text.contains(s0), "{text}");
+        assert!(text.contains(s1), "{text}");
+    }
+}

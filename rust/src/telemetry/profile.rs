@@ -1,0 +1,139 @@
+//! Folded-stack flamegraph export.
+//!
+//! The span tracer already knows, for every simulated cycle, which layer,
+//! cluster engine and instruction owned it. This module collapses those
+//! spans into the folded text format consumed by inferno / flamegraph.pl:
+//! one `frame;frame;frame weight` line per unique stack, here
+//! `layer;cluster/engine;instruction` with the weight in cycles. Feed the
+//! file to `inferno-flamegraph < profile.folded > profile.svg`.
+
+use std::collections::BTreeMap;
+
+/// Aggregated folded stacks: unique stack string -> total weight (cycles).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FoldedProfile {
+    stacks: BTreeMap<String, u64>,
+}
+
+impl FoldedProfile {
+    /// Empty profile.
+    pub fn new() -> Self {
+        FoldedProfile::default()
+    }
+
+    /// Add `weight` cycles to `stack` (frames already `;`-joined).
+    /// Zero weights are dropped — inferno ignores them anyway.
+    pub fn add(&mut self, stack: String, weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        *self.stacks.entry(stack).or_insert(0) += weight;
+    }
+
+    /// Fold another profile in, prefixing every stack with `prefix;`
+    /// (used to namespace per-model profiles in a multi-model run).
+    pub fn merge_prefixed(&mut self, prefix: &str, o: &FoldedProfile) {
+        for (stack, w) in &o.stacks {
+            self.add(format!("{prefix};{stack}"), *w);
+        }
+    }
+
+    /// Number of unique stacks.
+    pub fn len(&self) -> usize {
+        self.stacks.len()
+    }
+
+    /// True when no stack was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.stacks.is_empty()
+    }
+
+    /// Sum of all weights.
+    pub fn total_weight(&self) -> u64 {
+        self.stacks.values().sum()
+    }
+
+    /// Iterate `(stack, weight)` in deterministic (sorted) order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.stacks.iter().map(|(s, w)| (s.as_str(), *w))
+    }
+
+    /// Render the inferno-compatible folded text: one `stack weight` line
+    /// per unique stack, sorted for deterministic output.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(self.stacks.len() * 48);
+        for (stack, w) in &self.stacks {
+            out.push_str(stack);
+            out.push(' ');
+            out.push_str(&w.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse folded text back (round-trip tests, external profiles).
+    /// The weight is the token after the last space, as in flamegraph.pl.
+    pub fn parse(text: &str) -> crate::Result<FoldedProfile> {
+        let mut p = FoldedProfile::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            let (stack, w) = line
+                .rsplit_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("line {}: no weight field", ln + 1))?;
+            let w: u64 = w
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad weight {w:?}: {e}", ln + 1))?;
+            p.add(stack.to_string(), w);
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_aggregates_duplicate_stacks_and_drops_zeros() {
+        let mut p = FoldedProfile::new();
+        p.add("l0;cluster0/COMPUTE;conv.tile".into(), 10);
+        p.add("l0;cluster0/COMPUTE;conv.tile".into(), 5);
+        p.add("l0;cluster0/XFER;dmpa.load".into(), 0);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.total_weight(), 15);
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let mut p = FoldedProfile::new();
+        p.add("mbv1/conv0;cluster0/COMPUTE;conv.tile".into(), 123);
+        p.add("mbv1/conv0;cluster1/XFER;dmpa.load".into(), 45);
+        p.add("host;host;dispatch".into(), 7);
+        let text = p.render();
+        assert_eq!(FoldedProfile::parse(&text).unwrap(), p);
+        // every line is `frames... weight` with a numeric last token
+        for line in text.lines() {
+            let w = line.rsplit(' ').next().unwrap();
+            assert!(w.parse::<u64>().unwrap() > 0);
+        }
+    }
+
+    #[test]
+    fn merge_prefixed_namespaces_stacks() {
+        let mut a = FoldedProfile::new();
+        a.add("l0;cluster0/COMPUTE;conv.tile".into(), 3);
+        let mut all = FoldedProfile::new();
+        all.merge_prefixed("mbv1_1_1", &a);
+        assert_eq!(all.iter().next().unwrap(), ("mbv1_1_1;l0;cluster0/COMPUTE;conv.tile", 3));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(FoldedProfile::parse("no_weight_here").is_err());
+        assert!(FoldedProfile::parse("stack notanumber").is_err());
+        assert!(FoldedProfile::parse("").unwrap().is_empty());
+    }
+}

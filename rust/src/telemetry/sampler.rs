@@ -1,0 +1,195 @@
+//! Ring-buffer time-series sampler.
+//!
+//! Snapshots a fixed set of series (queue depth, fps, per-cluster
+//! utilization, per-component power, ...) at a configurable interval into
+//! a bounded ring: old samples are dropped once `capacity` is reached,
+//! and pushes closer together than `interval` coalesce into the last
+//! slot (the newest value wins). Works in two time domains — simulated
+//! cycles (`sim::sample_timeseries`) and wall-clock microseconds (the
+//! live frame loop) — because it only ever sees `f64` timestamps.
+
+use std::collections::VecDeque;
+
+/// One snapshot: timestamp plus one value per series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Timestamp in the caller's domain (cycles or microseconds).
+    pub t: f64,
+    /// Values, index-aligned with [`RingSampler::series`].
+    pub v: Vec<f64>,
+}
+
+/// Bounded time-series ring buffer.
+#[derive(Debug)]
+pub struct RingSampler {
+    interval: f64,
+    capacity: usize,
+    series: Vec<String>,
+    samples: VecDeque<Sample>,
+    dropped: u64,
+}
+
+impl RingSampler {
+    /// New sampler. `interval <= 0` disables coalescing; `capacity` is
+    /// clamped to at least one slot.
+    pub fn new(interval: f64, capacity: usize, series: Vec<String>) -> Self {
+        RingSampler {
+            interval,
+            capacity: capacity.max(1),
+            series,
+            samples: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    /// Series names, index-aligned with every sample's value vector.
+    pub fn series(&self) -> &[String] {
+        &self.series
+    }
+
+    /// Number of samples currently held.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when no sample has been recorded (e.g. an empty run).
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Samples evicted by the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Oldest-to-newest view of the retained samples.
+    pub fn samples(&self) -> impl Iterator<Item = &Sample> {
+        self.samples.iter()
+    }
+
+    /// Record a snapshot. A push closer than `interval` to the previous
+    /// one coalesces: the newest values overwrite the last slot (its
+    /// timestamp is kept so the grid stays on-interval).
+    pub fn push(&mut self, t: f64, v: Vec<f64>) {
+        debug_assert_eq!(v.len(), self.series.len());
+        if let Some(last) = self.samples.back_mut() {
+            if self.interval > 0.0 && t - last.t < self.interval {
+                last.v = v;
+                return;
+            }
+        }
+        if self.samples.len() == self.capacity {
+            self.samples.pop_front();
+            self.dropped += 1;
+        }
+        self.samples.push_back(Sample { t, v });
+    }
+
+    /// Serialize as JSON (`/timeseries.json` payload). An empty sampler
+    /// still produces a valid document.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(64 + self.samples.len() * 32);
+        s.push_str(&format!("{{\n  \"interval\": {},\n  \"series\": [", self.interval));
+        for (i, name) in self.series.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\"", name.replace('"', "\\\"")));
+        }
+        s.push_str("],\n  \"samples\": [");
+        for (i, sm) in self.samples.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\n    {{\"t\": {}, \"v\": [", sm.t));
+            for (j, v) in sm.v.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                if v.is_finite() {
+                    s.push_str(&format!("{v}"));
+                } else {
+                    s.push_str("null");
+                }
+            }
+            s.push_str("]}");
+        }
+        if !self.samples.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str(&format!("],\n  \"dropped\": {}\n}}\n", self.dropped));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::json::Json;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("s{i}")).collect()
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut r = RingSampler::new(1.0, 3, names(1));
+        for t in 0..5 {
+            r.push(t as f64, vec![t as f64 * 10.0]);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let ts: Vec<f64> = r.samples().map(|s| s.t).collect();
+        assert_eq!(ts, [2.0, 3.0, 4.0]);
+        assert_eq!(r.samples().last().unwrap().v, [40.0]);
+    }
+
+    #[test]
+    fn pushes_within_interval_coalesce_keeping_grid_timestamp() {
+        let mut r = RingSampler::new(10.0, 8, names(1));
+        r.push(0.0, vec![1.0]);
+        r.push(4.0, vec![2.0]);
+        r.push(9.9, vec![3.0]);
+        assert_eq!(r.len(), 1);
+        let s = r.samples().next().unwrap();
+        assert_eq!(s.t, 0.0);
+        assert_eq!(s.v, [3.0]);
+        r.push(10.0, vec![4.0]);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn zero_interval_never_coalesces() {
+        let mut r = RingSampler::new(0.0, 8, names(1));
+        r.push(1.0, vec![1.0]);
+        r.push(1.0, vec![2.0]);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn empty_sampler_serializes_to_valid_json() {
+        let r = RingSampler::new(2.5, 4, names(2));
+        let text = r.to_json();
+        let doc = Json::parse(&text).expect("valid JSON");
+        assert_eq!(doc.get("interval").and_then(Json::as_f64), Some(2.5));
+        assert_eq!(doc.get("samples").and_then(Json::as_arr).map(|a| a.len()), Some(0));
+        assert_eq!(doc.get("dropped").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn json_round_trips_samples_and_drop_count() {
+        let mut r = RingSampler::new(1.0, 2, vec!["fps".into(), "mw".into()]);
+        r.push(0.0, vec![30.0, 47.5]);
+        r.push(1.0, vec![29.0, 46.0]);
+        r.push(2.0, vec![28.0, f64::NAN]);
+        let doc = Json::parse(&r.to_json()).expect("valid JSON");
+        let samples = doc.get("samples").and_then(Json::as_arr).unwrap();
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].get("t").and_then(Json::as_f64), Some(1.0));
+        let v = samples[1].get("v").and_then(Json::as_arr).unwrap();
+        assert_eq!(v[0].as_f64(), Some(28.0));
+        assert!(matches!(v[1], Json::Null));
+        assert_eq!(doc.get("dropped").and_then(Json::as_f64), Some(1.0));
+    }
+}

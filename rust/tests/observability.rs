@@ -1,0 +1,199 @@
+//! Observability integration: PMU stall attribution accounts for every
+//! simulated cycle, the folded flamegraph export is inferno-loadable, the
+//! time-series sampler and the frame loop's per-cluster series work end to
+//! end, and `bench-compare` gates regressions with a non-zero exit.
+
+use j3dai::config::ArchConfig;
+use j3dai::coordinator::{run_functional_loop, CoordinatorConfig};
+use j3dai::graph::Shape;
+use j3dai::models;
+use j3dai::sim;
+use j3dai::telemetry::json::Json;
+use j3dai::telemetry::{PmuBank, StallReason, Telemetry};
+
+fn paper_workloads() -> [j3dai::graph::Graph; 3] {
+    [models::paper_mbv1(), models::paper_mbv2(), models::paper_seg()]
+}
+
+#[test]
+fn stall_attribution_accounts_for_every_cycle() {
+    // the acceptance bar: on all three Table I workloads, every cluster's
+    // busy + ctrl + classified stalls equals the end-to-end cycle count
+    let cfg = ArchConfig::j3dai();
+    for g in paper_workloads() {
+        let r = sim::simulate(&g, &cfg).unwrap();
+        assert!(!r.clusters.is_empty(), "{}: no cluster runs", g.name);
+        for (ci, c) in r.clusters.iter().enumerate() {
+            assert_eq!(
+                c.pmu.total.accounted(),
+                r.cycles,
+                "{} cluster {ci}: busy {} + ctrl {} + stalls {} != {} cycles",
+                g.name,
+                c.pmu.total.busy,
+                c.pmu.total.ctrl,
+                c.pmu.total.stall_total(),
+                r.cycles
+            );
+            // the per-layer banks decompose everything except the
+            // system-level HostSync wait (no layer owns the post-halt idle)
+            let per_layer: u64 = c.pmu.per_layer.values().map(PmuBank::accounted).sum();
+            let host_sync = c.pmu.total.stalls[StallReason::HostSync.index()];
+            assert_eq!(per_layer + host_sync, r.cycles, "{} cluster {ci}", g.name);
+        }
+    }
+}
+
+#[test]
+fn traced_and_untraced_pmu_counters_agree() {
+    let cfg = ArchConfig::j3dai();
+    let g = models::paper_mbv1();
+    let plain = sim::simulate(&g, &cfg).unwrap();
+    let (traced, tr) = sim::simulate_traced(&g, &cfg).unwrap();
+    assert_eq!(plain.cycles, traced.cycles);
+    assert_eq!(plain.clusters.len(), traced.clusters.len());
+    for (a, b) in plain.clusters.iter().zip(&traced.clusters) {
+        assert_eq!(a.pmu, b.pmu);
+    }
+    // the per-layer stall breakdown the report table prints covers every
+    // engine-level stall cycle (HostSync is system-level, not per-layer)
+    let table_stalls: u64 = tr.layers.iter().map(|l| l.stall_breakdown.iter().sum::<u64>()).sum();
+    let engine_stalls: u64 = traced
+        .clusters
+        .iter()
+        .map(|c| c.pmu.total.stall_total() - c.pmu.total.stalls[StallReason::HostSync.index()])
+        .sum();
+    assert_eq!(table_stalls, engine_stalls);
+}
+
+#[test]
+fn folded_profile_is_inferno_loadable() {
+    // inferno's folded format: one "stack weight" line, frames ';'-joined
+    let (_, tr) = sim::simulate_traced(&models::paper_mbv1(), &ArchConfig::j3dai()).unwrap();
+    let text = tr.folded.render();
+    assert!(!text.is_empty());
+    let mut total_weight = 0u64;
+    for line in text.lines() {
+        let (stack, weight) = line.rsplit_once(' ').expect("stack<space>weight");
+        let w: u64 = weight.parse().expect("integer weight");
+        assert!(w > 0, "zero-weight line: {line}");
+        assert_eq!(stack.split(';').count(), 3, "layer;cluster/engine;instr: {line}");
+        total_weight += w;
+    }
+    assert!(total_weight > 0);
+    assert!(text.contains("/COMPUTE;"), "no compute frames:\n{text}");
+    assert!(text.contains("/XFER;"), "no transfer frames:\n{text}");
+}
+
+#[test]
+fn cycle_domain_sampler_rings_and_serializes() {
+    let cfg = ArchConfig::j3dai();
+    let g = models::paper_mbv1();
+    let (r, sampler) = sim::sample_timeseries(&g, &cfg, 2048, 32).unwrap();
+    let windows = r.cycles.div_ceil(2048);
+    assert_eq!(sampler.len() as u64 + sampler.dropped(), windows);
+    assert!(sampler.len() <= 32);
+    assert_eq!(sampler.series()[0], "cluster0_util");
+    assert!(sampler.series().iter().any(|s| s == "power_mw_total"));
+    for s in sampler.samples() {
+        for (name, v) in sampler.series().iter().zip(&s.v) {
+            if name.ends_with("_util") {
+                assert!((0.0..=1.0).contains(v), "{name} = {v} out of range");
+            }
+        }
+    }
+    let doc = Json::parse(&sampler.to_json()).expect("valid JSON");
+    let samples = doc.get("samples").and_then(Json::as_arr).unwrap();
+    assert_eq!(samples.len(), sampler.len());
+}
+
+#[test]
+fn frame_loop_publishes_cluster_series_exemplars_and_timeseries() {
+    let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+    let tel = Telemetry::new(false);
+    let ccfg =
+        CoordinatorConfig { target_fps: 10_000.0, frames: 3, arch: ArchConfig::j3dai() };
+    let stats = run_functional_loop(&g, &ccfg, &tel).unwrap();
+    assert_eq!(stats.frames, 3);
+
+    let text = tel.render_metrics();
+    let stall0 = "j3dai_stall_cycles_total{cluster=\"0\",model=\"tinycnn\",reason=\"dma_wait\"}";
+    assert!(text.contains(stall0), "missing {stall0} in:\n{text}");
+    let energy0 = "j3dai_energy_mj_total{cluster=\"0\",model=\"tinycnn\"}";
+    assert!(text.contains(energy0), "missing {energy0} in:\n{text}");
+    // the labeled cluster series exist for every simulated cluster
+    let cfg = ArchConfig::j3dai();
+    let last = format!("j3dai_stall_cycles_total{{cluster=\"{}\"", cfg.clusters - 1);
+    assert!(text.contains(&last), "missing {last} in:\n{text}");
+
+    // exemplars only render behind the flag, and carry a frame trace id
+    assert!(!text.contains("trace_id"), "{text}");
+    let with = tel.registry.render_with_exemplars(true);
+    assert!(with.contains("# {trace_id=\"frame"), "{with}");
+
+    // one time-series snapshot per processed frame on the live endpoint
+    let doc = Json::parse(&tel.export_timeseries_json()).expect("valid JSON");
+    let series = doc.get("series").and_then(Json::as_arr).unwrap();
+    assert!(series.iter().any(|s| s.as_str() == Some("queue_depth")), "{series:?}");
+    assert!(series.iter().any(|s| s.as_str() == Some("energy_mj_total")), "{series:?}");
+    let samples = doc.get("samples").and_then(Json::as_arr).unwrap();
+    assert_eq!(samples.len(), 3);
+}
+
+#[test]
+fn stall_and_roofline_reports_render_for_all_workloads() {
+    let cfg = ArchConfig::j3dai();
+    let em = j3dai::power::EnergyModel::fdsoi28();
+    for g in paper_workloads() {
+        let (r, tr) = sim::simulate_traced(&g, &cfg).unwrap();
+        let stall = j3dai::report::render_stall_table(&g, &r);
+        assert_eq!(stall.matches("[OK]").count(), cfg.clusters, "{stall}");
+        assert!(!stall.contains("MISMATCH"), "{stall}");
+        let cluster = j3dai::report::render_cluster_table(&r, &em);
+        assert!(cluster.contains("E mJ"), "{cluster}");
+        let svg = j3dai::report::roofline_svg(&tr, &cfg);
+        assert!(svg.starts_with("<svg ") && svg.ends_with("</svg>\n"));
+    }
+}
+
+#[test]
+fn bench_compare_cli_gates_with_nonzero_exit() {
+    // the acceptance bar: a latency regression past tolerance fails the
+    // process (CI gate), while matching snapshots pass
+    let snapshot = |latency: f64| {
+        format!(
+            "{{\"models\": [{{\"model\": \"mbv1_1_1\", \"latency_ms\": {latency}, \
+             \"energy_mj\": 1.2, \"power_mw_30\": 47.6, \"power_mw_200\": null, \
+             \"tops_per_w\": 0.77, \"mac_eff\": 0.768}}]}}"
+        )
+    };
+    let dir = std::env::temp_dir().join(format!("j3dai_bc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("base.json");
+    let good = dir.join("good.json");
+    let bad = dir.join("bad.json");
+    std::fs::write(&base, snapshot(5.0)).unwrap();
+    std::fs::write(&good, snapshot(5.1)).unwrap();
+    std::fs::write(&bad, snapshot(6.0)).unwrap();
+
+    let run = |cand: &std::path::Path, extra: &[&str]| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_j3dai"))
+            .arg("bench-compare")
+            .arg(&base)
+            .arg(cand)
+            .args(extra)
+            .output()
+            .expect("spawn j3dai")
+    };
+    let ok = run(&good, &[]);
+    assert!(ok.status.success(), "{}", String::from_utf8_lossy(&ok.stderr));
+    assert!(String::from_utf8_lossy(&ok.stdout).contains("latency_ms"));
+
+    let fail = run(&bad, &[]);
+    assert!(!fail.status.success(), "20% latency regression must gate");
+    assert!(String::from_utf8_lossy(&fail.stderr).contains("REGRESSION"));
+
+    // a loose explicit tolerance lets the same diff through
+    let loose = run(&bad, &["--latency-tol", "50"]);
+    assert!(loose.status.success(), "{}", String::from_utf8_lossy(&loose.stderr));
+    std::fs::remove_dir_all(&dir).ok();
+}
