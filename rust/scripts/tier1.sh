@@ -15,6 +15,11 @@ cargo test -q
 echo "== cargo test -q --test ppa_regression"
 cargo test -q --test ppa_regression
 
+# Static program verifier over every Table I workload: any error-severity
+# diagnostic in the compiled cluster programs fails the tier.
+echo "== cargo run --release -- lint --model all"
+cargo run --release -- lint --model all
+
 if cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy -- -D warnings"
     cargo clippy --all-targets -- -D warnings

@@ -62,7 +62,7 @@ pub fn place_memory(g: &Graph, cfg: &ArchConfig) -> crate::Result<Placement> {
     // "no specific memory bank is dedicated to filter parameters or feature
     // maps" §III-B3): half the 1.5 MB local budget extends the arena, the
     // other half is the tiles' working space.
-    let cap = total + (cfg.local_sram_bytes() / 2) as u32;
+    let cap = cfg.l2_arena_bytes() as u32;
 
     // Parameters are resident for the whole run: pack them first, bottom up.
     let mut cursor: u32 = 0;
@@ -157,7 +157,7 @@ pub fn gemm_view(g: &Graph, li: usize) -> Option<(usize, usize, usize)> {
 /// working set). Mirrors the paper's solver: enumerate, check fit, score.
 fn search_gemm_tiles(cfg: &ArchConfig, m_c: usize, k: usize, n: usize) -> (usize, usize, usize, f64, usize) {
     let lanes = cfg.cluster_macs_per_cycle() as usize;
-    let budget = cfg.ncbs_per_cluster * cfg.ncb_sram_bytes; // per-cluster SRAM
+    let budget = cfg.cluster_local_bytes(); // per-cluster SRAM
     let mut best: Option<(u64, usize, usize, usize, usize)> = None; // (cost, bm,bk,bn, ws)
     for &bm in &[32usize, 64, 128, 256, 512] {
         let bm = bm.min(m_c.max(1));
@@ -266,7 +266,7 @@ pub fn map_layers(g: &Graph, cfg: &ArchConfig, _placement: &Placement) -> crate:
             }
         };
         anyhow::ensure!(
-            map.working_set_bytes <= cfg.ncbs_per_cluster * cfg.ncb_sram_bytes,
+            map.working_set_bytes <= cfg.cluster_local_bytes(),
             "layer {} working set {} exceeds cluster SRAM",
             l.name,
             map.working_set_bytes

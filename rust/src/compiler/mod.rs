@@ -106,7 +106,7 @@ pub fn compile_traced(g: &Graph, cfg: &ArchConfig, tel: Option<&Telemetry>) -> c
     }
     let placement = pass(tel, "place_memory", || mapper::place_memory(g, cfg))?;
     let maps = pass(tel, "map_layers", || mapper::map_layers(g, cfg, &placement))?;
-    let programs = pass(tel, "codegen", || codegen::emit(g, cfg, &maps))?;
+    let programs = pass(tel, "codegen", || codegen::emit(g, cfg, &maps, &placement))?;
     let host_steps = pass(tel, "host_schedule", || Ok(scheduler::host_schedule(g, cfg)))?;
     // MAC conservation: the emitted programs must perform exactly the
     // graph's MACs (the mapper may not drop or duplicate work).
@@ -151,7 +151,7 @@ mod tests {
             let c = compile(&g, &cfg).unwrap();
             assert_eq!(c.total_macs(), g.total_macs(), "{}", g.name);
             // parameters must fit the 5 MB L2 alongside peak activations
-            let cap = (cfg.l2_bytes() + cfg.local_sram_bytes() / 2) as u64;
+            let cap = cfg.l2_arena_bytes() as u64;
             assert!(c.param_bytes + c.peak_activation_bytes <= cap, "{}", g.name);
         }
     }

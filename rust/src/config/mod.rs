@@ -122,6 +122,20 @@ impl ArchConfig {
         self.clusters * self.ncbs_per_cluster * self.ncb_sram_bytes
     }
 
+    /// NCB-local SRAM capacity of one cluster — the resident-buffer bound
+    /// the mapper's tile search and the verifier's bounds pass share.
+    pub fn cluster_local_bytes(&self) -> usize {
+        self.ncbs_per_cluster * self.ncb_sram_bytes
+    }
+
+    /// Unified compiler-visible L2 arena: both L2 partitions plus the half
+    /// of the NCB-local SRAM the placement stage may use as activation
+    /// spill (`compiler::mapper::place_memory`'s capacity; the verifier
+    /// checks every L2-side transfer window against this bound).
+    pub fn l2_arena_bytes(&self) -> usize {
+        self.l2_bytes() + self.local_sram_bytes() / 2
+    }
+
     /// Peak throughput in GOPS (1 MAC = 2 ops).
     pub fn peak_gops(&self) -> f64 {
         self.macs_per_cycle() as f64 * 2.0 * self.freq_mhz * 1e6 / 1e9
@@ -182,6 +196,13 @@ mod tests {
         assert_eq!(dmpa - c.dmpa_setup_cycles, 8192); // 1 MiB / 128 B
         // paper speaks of 1 MB = 10^6 bytes in "1000 cycles" order of magnitude
         assert!(dma / dmpa >= 15, "dma={dma} dmpa={dmpa}");
+    }
+
+    #[test]
+    fn arena_and_cluster_bounds() {
+        let c = ArchConfig::j3dai();
+        assert_eq!(c.cluster_local_bytes(), 256 * 1024);
+        assert_eq!(c.l2_arena_bytes(), c.l2_bytes() + c.local_sram_bytes() / 2);
     }
 
     #[test]

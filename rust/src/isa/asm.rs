@@ -15,20 +15,21 @@ fn parse_space(s: &str) -> crate::Result<Space> {
 }
 
 fn parse_num(s: &str) -> crate::Result<u32> {
-    let s = s.trim_start_matches("0x");
-    if s.chars().all(|c| c.is_ascii_digit()) && !s.starts_with("0x") {
-        // decimal unless it came with the 0x prefix (stripped above keeps hex digits)
+    if let Some(hex) = s.strip_prefix("0x") {
+        // an explicit 0x prefix is always hexadecimal — "0x1000" is 4096
+        u32::from_str_radix(hex, 16).map_err(|e| anyhow::anyhow!("bad number {s}: {e}"))
+    } else if s.chars().any(|c| c.is_ascii_alphabetic()) {
+        u32::from_str_radix(s, 16).map_err(|e| anyhow::anyhow!("bad number {s}: {e}"))
+    } else {
+        s.parse().map_err(|e| anyhow::anyhow!("bad number {s}: {e}"))
     }
-    u32::from_str_radix(s, if s.chars().any(|c| c.is_ascii_alphabetic()) { 16 } else { 10 })
-        .or_else(|_| s.parse())
-        .map_err(|e| anyhow::anyhow!("bad number {s}: {e}"))
 }
 
 /// Parse an address token like `L2Bottom:0x1000` or `local:0x0`.
 fn parse_addr(tok: &str) -> crate::Result<(Option<Space>, u32)> {
     let (sp, addr) = tok.split_once(':').ok_or_else(|| anyhow::anyhow!("bad address {tok}"))?;
     let space = if sp == "local" { None } else { Some(parse_space(sp)?) };
-    Ok((space, parse_num(addr.trim_start_matches("0x"))?))
+    Ok((space, parse_num(addr)?))
 }
 
 /// Parse one listing line (with or without the `NN:` prefix).

@@ -16,7 +16,12 @@
 
 pub mod asm;
 
+use anyhow::Context as _;
 use std::fmt;
+
+/// AIU hardware loop registers per cluster controller (one per loop level
+/// of the deepest mapped nest; `Instr::decode` rejects anything above).
+pub const NUM_AIU_LOOP_REGS: u8 = 8;
 
 /// Memory spaces addressable by transfers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -220,7 +225,9 @@ impl Instr {
         w
     }
 
-    /// Decode from a 16-byte word.
+    /// Decode from a 16-byte word, validating every discriminant: unknown
+    /// opcodes, bad `Space` codes, out-of-range AIU loop registers and
+    /// invalid flag bits are errors naming the offending byte offset.
     pub fn decode(w: &[u8; 16]) -> crate::Result<Instr> {
         let get = |idx: usize| u32::from_le_bytes(w[idx..idx + 4].try_into().unwrap());
         Ok(match w[0] {
@@ -228,17 +235,34 @@ impl Instr {
             0x02 => Instr::DmpaStore { dst: code_space(w[1])?, dst_addr: get(4), src_addr: get(8), bytes: get(12) },
             0x03 => Instr::DmaLoad { src: code_space(w[1])?, src_addr: get(4), dst_addr: get(8), bytes: get(12) },
             0x04 => Instr::DmaStore { dst: code_space(w[1])?, dst_addr: get(4), src_addr: get(8), bytes: get(12) },
-            0x05 => Instr::AiuLoop { reg: w[1], count: get(4), stride: get(8) },
+            0x05 => {
+                anyhow::ensure!(
+                    w[1] < NUM_AIU_LOOP_REGS,
+                    "AIU loop register {} out of range 0..{NUM_AIU_LOOP_REGS} at byte offset 1",
+                    w[1]
+                );
+                Instr::AiuLoop { reg: w[1], count: get(4), stride: get(8) }
+            }
             0x06 => Instr::RouteCfg { pattern: w[1] },
             0x07 => Instr::LayerMark { id: get(4) },
-            0x10 => Instr::ConvTile { m: get(4), k: get(8), n: get(12), first: w[1] & 1 != 0, last: w[1] & 2 != 0 },
+            0x10 => {
+                anyhow::ensure!(
+                    w[1] & !0b11 == 0,
+                    "invalid ConvTile flag bits {:#04x} (only first|last allowed) at byte offset 1",
+                    w[1]
+                );
+                Instr::ConvTile { m: get(4), k: get(8), n: get(12), first: w[1] & 1 != 0, last: w[1] & 2 != 0 }
+            }
             0x11 => Instr::DwTile { h: get(4), w: get(8), c: get(12), stride: w[1] },
             0x12 => Instr::AddTile { n: get(4) },
-            0x13 => Instr::ActTile { n: get(4), nlu: w[1] != 0 },
+            0x13 => {
+                anyhow::ensure!(w[1] <= 1, "invalid ActTile nlu byte {:#04x} at byte offset 1", w[1]);
+                Instr::ActTile { n: get(4), nlu: w[1] != 0 }
+            }
             0x14 => Instr::PoolTile { h: get(4), w: get(8), c: get(12) },
             0x20 => Instr::Sync,
             0x21 => Instr::Halt,
-            op => anyhow::bail!("unknown opcode {op:#x}"),
+            op => anyhow::bail!("unknown opcode {op:#04x} at byte offset 0"),
         })
     }
 }
@@ -256,7 +280,7 @@ fn code_space(c: u8) -> crate::Result<Space> {
         0 => Space::L2Bottom,
         1 => Space::L2Middle,
         2 => Space::Local,
-        _ => anyhow::bail!("unknown space code {c}"),
+        _ => anyhow::bail!("unknown space code {c} at byte offset 1"),
     })
 }
 
@@ -316,12 +340,30 @@ impl Program {
         out
     }
 
-    /// Parse back from binary.
+    /// Parse back from binary. Rejects inputs that are not a whole number
+    /// of 16-byte words and any trailing bytes after the `halt` word —
+    /// both are corruption, not padding.
     pub fn disassemble(bytes: &[u8]) -> crate::Result<Program> {
-        anyhow::ensure!(bytes.len() % 16 == 0, "program not word-aligned");
-        let mut instrs = Vec::with_capacity(bytes.len() / 16);
-        for wdw in bytes.chunks_exact(16) {
-            instrs.push(Instr::decode(wdw.try_into().unwrap())?);
+        anyhow::ensure!(
+            bytes.len() % 16 == 0,
+            "program length {} is not a multiple of the 16-byte instruction word ({} trailing bytes)",
+            bytes.len(),
+            bytes.len() % 16
+        );
+        let words = bytes.len() / 16;
+        let mut instrs = Vec::with_capacity(words);
+        for (wi, wdw) in bytes.chunks_exact(16).enumerate() {
+            let instr = Instr::decode(wdw.try_into().unwrap())
+                .with_context(|| format!("bad instruction at word {wi} (byte offset {})", wi * 16))?;
+            let halted = instr == Instr::Halt;
+            instrs.push(instr);
+            if halted && wi + 1 < words {
+                anyhow::bail!(
+                    "{} trailing byte(s) after halt at word {wi} (byte offset {})",
+                    bytes.len() - (wi + 1) * 16,
+                    (wi + 1) * 16
+                );
+            }
         }
         Ok(Program { instrs })
     }

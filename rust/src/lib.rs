@@ -31,6 +31,9 @@
 //! - [`telemetry`] — crate-wide observability: metrics registry
 //!   (Prometheus-style text), span tracing (Chrome trace-event / Perfetto
 //!   export) and the shared percentile helper — see docs/OBSERVABILITY.md
+//! - [`verify`]   — static program verifier: bounds/hazard/protocol/
+//!   structure passes over compiled programs, SARIF export, the `lint`
+//!   CLI gate — see docs/VERIFIER.md
 //! - [`report`]   — renders the paper's tables/figures from measurements
 //! - [`ptest`]    — tiny in-repo property-test runner (offline registry has
 //!   no proptest crate)
@@ -49,6 +52,7 @@ pub mod runtime;
 pub mod sensor;
 pub mod sim;
 pub mod telemetry;
+pub mod verify;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

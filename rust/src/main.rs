@@ -17,6 +17,8 @@
 //!                                                      PPA trajectory diff, exit 1 on regression
 //! j3dai table1 | table2 | fig5 | fig6                  print a paper table/figure
 //! j3dai compile [--model ...]                          show mapping/schedule report
+//! j3dai lint   [--model mbv1|mbv2|seg|all] [--json] [--sarif-out F] [--flag-tsv]
+//!              [--deny-warnings] [--context N]         static program verifier, exit 1 on errors
 //! j3dai list                                           list loaded artifacts
 //! ```
 //!
@@ -459,6 +461,58 @@ fn run() -> j3dai::Result<()> {
                 println!("  ... {} more layers", c.layer_maps.len() - 8);
             }
         }
+        "lint" => {
+            if has_flag(&args, "--help") {
+                println!(
+                    "j3dai lint [--model mbv1|mbv2|seg|all|<artifact>] [--json] [--sarif-out F] \
+                     [--flag-tsv] [--deny-warnings] [--context N]"
+                );
+                println!();
+                println!("Compile each model and run the static program verifier over every");
+                println!("cluster program: bounds/capacity, Xfer-Compute hazards, the ConvTile");
+                println!("accumulator-chain protocol and program structure (docs/VERIFIER.md).");
+                println!("Prints a human table (or --json), writes SARIF 2.1.0 with --sarif-out,");
+                println!("and exits non-zero on any error diagnostic (--deny-warnings tightens");
+                println!("the gate to warnings too). --flag-tsv enumerates TSV-crossing");
+                println!("transfers as notes; --context N widens the listing window.");
+                return Ok(());
+            }
+            let which = flag(&args, "--model").unwrap_or_else(|| "all".into());
+            let keys: Vec<&str> = if which == "all" {
+                vec!["mbv1", "mbv2", "seg"]
+            } else {
+                vec![model_key(&which)]
+            };
+            let policy = j3dai::verify::VerifyPolicy {
+                flag_tsv: has_flag(&args, "--flag-tsv"),
+                context_lines: flag(&args, "--context").and_then(|v| v.parse().ok()).unwrap_or(2),
+            };
+            let mut reports: Vec<(String, j3dai::verify::VerifyReport)> = Vec::new();
+            for &key in &keys {
+                let g = require_graph(key)?;
+                let c = compiler::compile(&g, &cfg)?;
+                let rep = j3dai::verify::verify_programs(&c.cluster_programs, &cfg, &policy);
+                reports.push((g.name.clone(), rep));
+            }
+            if has_flag(&args, "--json") {
+                println!("{}", j3dai::verify::sarif::to_json(&reports));
+            } else {
+                for (model, rep) in &reports {
+                    print!("{}", report::render_diagnostics(model, rep));
+                }
+            }
+            if let Some(path) = flag(&args, "--sarif-out") {
+                std::fs::write(&path, j3dai::verify::sarif::to_sarif(&reports))
+                    .with_context(|| format!("cannot write {path}"))?;
+                println!("SARIF written to {path}");
+            }
+            let errors: usize = reports.iter().map(|(_, r)| r.error_count()).sum();
+            let warnings: usize = reports.iter().map(|(_, r)| r.warning_count()).sum();
+            anyhow::ensure!(errors == 0, "{errors} error diagnostic(s) across {} model(s)", keys.len());
+            if has_flag(&args, "--deny-warnings") {
+                anyhow::ensure!(warnings == 0, "{warnings} warning diagnostic(s) with --deny-warnings");
+            }
+        }
         "check-artifacts" => {
             // self-check: run every artifact on its recorded input and
             // compare against the recorded golden bytes
@@ -501,14 +555,15 @@ fn print_help() {
     println!("j3dai — J3DAI (ISLPED'25) digital-system reproduction");
     println!(
         "commands: serve | sim | trace | sample | roofline | metrics | bench-telemetry | \
-         bench-ppa | bench-compare | table1 | table2 | fig5 | fig6 | compile | list"
+         bench-ppa | bench-compare | table1 | table2 | fig5 | fig6 | compile | lint | list"
     );
     println!(
         "  serve --metrics-addr HOST:PORT exposes live /metrics, /trace.json, /timeseries.json"
     );
     println!("  sim/trace --profile-out F write inferno-format folded stacks (flamegraphs)");
     println!("  roofline --svg-out F writes the roofline plot as a standalone SVG");
-    println!("  sample / roofline / bench-ppa / bench-compare --help print per-command usage");
+    println!("  lint runs the static program verifier (bounds/hazard/protocol/structure)");
+    println!("  sample / roofline / bench-ppa / bench-compare / lint --help print per-command usage");
 }
 
 // (dev helper kept out of the help text: `j3dai tiles` prints per-model

@@ -738,6 +738,45 @@ pub fn bench_telemetry_json(entries: &[BenchEntry]) -> String {
     s
 }
 
+/// Render the `lint` subcommand's human-readable diagnostics table for
+/// one verified model: summary line, fixed-width columns, then (when the
+/// policy captured any) the listing context of each error.
+pub fn render_diagnostics(model: &str, report: &crate::verify::VerifyReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{model}: {} error(s), {} warning(s), {} note(s)\n",
+        report.error_count(),
+        report.warning_count(),
+        report.note_count()
+    ));
+    if report.diagnostics.is_empty() {
+        s.push_str("  clean — no diagnostics\n");
+        return s;
+    }
+    s.push_str(&format!(
+        "  {:<8} {:<9} {:<28} {:>7} {:>6}  {}\n",
+        "severity", "pass", "rule", "cluster", "pc", "message"
+    ));
+    for d in &report.diagnostics {
+        s.push_str(&format!(
+            "  {:<8} {:<9} {:<28} {:>7} {:>6}  {}\n",
+            d.severity.label(),
+            d.pass.label(),
+            d.code,
+            d.cluster,
+            d.pc,
+            d.message
+        ));
+    }
+    for d in report.diagnostics.iter().filter(|d| d.severity == crate::verify::Severity::Error) {
+        s.push_str(&format!("\n  {d}\n"));
+        for line in d.context.lines() {
+            s.push_str(&format!("    {line}\n"));
+        }
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -752,6 +791,25 @@ mod tests {
             assert!(t.contains(&l.name), "missing layer {} in:\n{t}", l.name);
         }
         assert!(t.contains("total"));
+    }
+
+    #[test]
+    fn diagnostics_table_renders_clean_and_dirty() {
+        use crate::isa::{Instr, Program};
+        use crate::verify::{verify_programs, VerifyPolicy};
+        let cfg = ArchConfig::j3dai();
+        let clean = verify_programs(
+            &[Program { instrs: vec![Instr::LayerMark { id: 0 }, Instr::Halt] }],
+            &cfg,
+            &VerifyPolicy::default(),
+        );
+        let t = render_diagnostics("mbv1", &clean);
+        assert!(t.contains("0 error(s)"), "{t}");
+        assert!(t.contains("clean"), "{t}");
+        let dirty = verify_programs(&[Program { instrs: vec![Instr::Sync] }], &cfg, &VerifyPolicy::default());
+        let t = render_diagnostics("mbv1", &dirty);
+        assert!(t.contains("structure.missing-halt"), "{t}");
+        assert!(t.contains("->"), "{t}"); // listing context of the error
     }
 
     #[test]

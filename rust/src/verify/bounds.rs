@@ -1,0 +1,164 @@
+//! Bounds/capacity pass — every `Dmpa*`/`Dma*` transfer window checked
+//! against the compiler-visible L2 arena and the cluster's NCB-local SRAM
+//! capacity, with TSV-crossing transfers optionally enumerated.
+//!
+//! Address semantics mirror the compiler's memory model, not a literal
+//! banked address map: the L2 side of a transfer indexes the unified
+//! placement arena ([`ArchConfig::l2_arena_bytes`]) and the local side
+//! indexes the cluster's flat NCB-SRAM window
+//! ([`ArchConfig::cluster_local_bytes`]). A local window whose *base* is
+//! in range but whose extent runs past the SRAM top is not an error: the
+//! multi-banked buffers stream tiles larger than residency (the §III-B1
+//! flattened organization), so it demotes to a warning — only a base
+//! address outside the SRAM entirely is a hard error.
+
+use super::{Ctx, Pass, Severity};
+use crate::isa::{Instr, Space};
+
+pub(crate) fn run(ctx: &mut Ctx<'_>) {
+    let arena = ctx.cfg.l2_arena_bytes() as u64;
+    let local_cap = ctx.cfg.cluster_local_bytes() as u64;
+    for pc in 0..ctx.prog.instrs.len() {
+        let (far_space, far_addr, local_addr, bytes) = match ctx.prog.instrs[pc] {
+            Instr::DmpaLoad { src, src_addr, dst_addr, bytes }
+            | Instr::DmaLoad { src, src_addr, dst_addr, bytes } => (src, src_addr, dst_addr, bytes),
+            Instr::DmpaStore { dst, dst_addr, src_addr, bytes }
+            | Instr::DmaStore { dst, dst_addr, src_addr, bytes } => (dst, dst_addr, src_addr, bytes),
+            _ => continue,
+        };
+        if bytes == 0 {
+            ctx.diag(
+                Severity::Warning,
+                Pass::Bounds,
+                "bounds.empty-transfer",
+                pc,
+                "transfer moves 0 bytes (pays setup cycles for nothing)".into(),
+            );
+        }
+        // local side of the transfer
+        check_local(ctx, pc, local_addr, bytes, local_cap);
+        // far side: normally an L2 partition; a Local far side makes the
+        // transfer local-to-local, so both windows face the SRAM bound.
+        if far_space == Space::Local {
+            check_local(ctx, pc, far_addr, bytes, local_cap);
+        } else if far_addr as u64 >= arena {
+            ctx.diag(
+                Severity::Error,
+                Pass::Bounds,
+                "bounds.l2-oob",
+                pc,
+                format!("L2 address {far_addr:#x} is outside the {arena}-byte placement arena"),
+            );
+        } else if far_addr as u64 + bytes as u64 > arena {
+            ctx.diag(
+                Severity::Error,
+                Pass::Bounds,
+                "bounds.l2-overflow",
+                pc,
+                format!(
+                    "L2 window {far_addr:#x}+{bytes} runs {} byte(s) past the {arena}-byte placement arena",
+                    far_addr as u64 + bytes as u64 - arena
+                ),
+            );
+        }
+        if ctx.policy.flag_tsv && ctx.prog.instrs[pc].crosses_tsv() {
+            ctx.diag(
+                Severity::Note,
+                Pass::Bounds,
+                "bounds.tsv-crossing",
+                pc,
+                format!("{bytes}-byte transfer crosses the middle-die TSVs"),
+            );
+        }
+    }
+}
+
+fn check_local(ctx: &mut Ctx<'_>, pc: usize, addr: u32, bytes: u32, cap: u64) {
+    if addr as u64 >= cap {
+        ctx.diag(
+            Severity::Error,
+            Pass::Bounds,
+            "bounds.local-oob",
+            pc,
+            format!("local address {addr:#x} is outside the {cap}-byte cluster SRAM"),
+        );
+    } else if addr as u64 + bytes as u64 > cap {
+        ctx.diag(
+            Severity::Warning,
+            Pass::Bounds,
+            "bounds.local-spill",
+            pc,
+            format!(
+                "local window {addr:#x}+{bytes} exceeds the {cap}-byte cluster SRAM \
+                 (assumed streamed through the multi-banked buffers)"
+            ),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::ArchConfig;
+    use crate::isa::{Instr, Program, Space};
+    use crate::verify::{verify_programs, Severity, VerifyPolicy};
+
+    fn wrap(body: Vec<Instr>) -> Vec<Instr> {
+        let mut v = vec![Instr::LayerMark { id: 0 }];
+        v.extend(body);
+        v.push(Instr::Sync);
+        v.push(Instr::Halt);
+        v
+    }
+
+    fn codes(instrs: Vec<Instr>) -> Vec<&'static str> {
+        let r = verify_programs(&[Program { instrs }], &ArchConfig::j3dai(), &VerifyPolicy::default());
+        r.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn local_oob_is_error_spill_is_warning() {
+        let cap = ArchConfig::j3dai().cluster_local_bytes() as u32;
+        let oob = codes(wrap(vec![Instr::DmpaLoad {
+            src: Space::L2Bottom,
+            src_addr: 0,
+            dst_addr: cap,
+            bytes: 16,
+        }]));
+        assert!(oob.contains(&"bounds.local-oob"), "{oob:?}");
+        let spill = wrap(vec![Instr::DmpaLoad {
+            src: Space::L2Bottom,
+            src_addr: 0,
+            dst_addr: cap - 1,
+            bytes: 16,
+        }]);
+        let r = verify_programs(&[Program { instrs: spill }], &ArchConfig::j3dai(), &VerifyPolicy::default());
+        assert!(r.is_clean(), "{}", r.render_text());
+        assert_eq!(r.count(Severity::Warning), 1);
+        assert_eq!(r.diagnostics[0].code, "bounds.local-spill");
+    }
+
+    #[test]
+    fn l2_windows_checked_against_arena() {
+        let arena = ArchConfig::j3dai().l2_arena_bytes() as u32;
+        let oob = codes(wrap(vec![Instr::DmaStore {
+            dst: Space::L2Bottom,
+            dst_addr: arena,
+            src_addr: 0,
+            bytes: 8,
+        }]));
+        assert!(oob.contains(&"bounds.l2-oob"), "{oob:?}");
+        let over = codes(wrap(vec![Instr::DmaStore {
+            dst: Space::L2Middle,
+            dst_addr: arena - 4,
+            src_addr: 0,
+            bytes: 8,
+        }]));
+        assert!(over.contains(&"bounds.l2-overflow"), "{over:?}");
+    }
+
+    #[test]
+    fn empty_transfer_warns() {
+        let c = codes(wrap(vec![Instr::DmaLoad { src: Space::L2Bottom, src_addr: 0, dst_addr: 0, bytes: 0 }]));
+        assert!(c.contains(&"bounds.empty-transfer"), "{c:?}");
+    }
+}

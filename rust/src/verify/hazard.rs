@@ -1,0 +1,187 @@
+//! Hazard pass — abstract interpretation of the two-engine overlap.
+//!
+//! The simulator (and the real cluster controller) runs transfers and
+//! tile computations on decoupled engines that only meet at `Sync`
+//! (§III-C2's "masking parameter loading" double buffering). Between two
+//! barriers, a load that rewrites a local buffer a not-yet-retired
+//! compute still reads is a WAR race; rewriting a buffer that was loaded
+//! in the *same* epoch with no compute in between is an outright clobber
+//! of data nothing consumed yet. Stores issued while computes from the
+//! same epoch are still in flight read an accumulator that may not be
+//! drained.
+//!
+//! The abstraction: each resident load (window strictly inside the
+//! cluster SRAM — streamed/spilled windows are the bounds pass's
+//! business) becomes a pending write with an *age* = number of compute
+//! ops issued since it. Age 0 overlap → clobber error; age 1 → the
+//! single-buffering warning (the consumer compute may still be running
+//! when the rewrite lands); age ≥ 2 → proper double buffering, the slot
+//! has provably retired. `Sync` retires everything.
+
+use super::{Ctx, Pass, Severity};
+use crate::isa::{Engine, Instr};
+
+struct PendingWrite {
+    pc: usize,
+    lo: u64,
+    hi: u64,
+    /// Compute ops issued since this load, in the same sync epoch.
+    age: u32,
+}
+
+pub(crate) fn run(ctx: &mut Ctx<'_>) {
+    let cap = ctx.cfg.cluster_local_bytes() as u64;
+    let mut pending: Vec<PendingWrite> = Vec::new();
+    let mut computes_since_sync = 0u32;
+    for pc in 0..ctx.prog.instrs.len() {
+        match ctx.prog.instrs[pc] {
+            Instr::DmpaLoad { dst_addr, bytes, .. } | Instr::DmaLoad { dst_addr, bytes, .. } => {
+                let (lo, hi) = (dst_addr as u64, dst_addr as u64 + bytes as u64);
+                // only windows strictly inside the SRAM are resident
+                // buffers; anything touching the top streams through the
+                // banked FIFOs and has no stable address to race on.
+                if bytes == 0 || hi >= cap {
+                    continue;
+                }
+                for w in pending.iter().filter(|w| w.lo < hi && lo < w.hi) {
+                    match w.age {
+                        0 => ctx.diag(
+                            Severity::Error,
+                            Pass::Hazard,
+                            "hazard.clobber",
+                            pc,
+                            format!(
+                                "load rewrites local [{:#x}, {:#x}) loaded at pc {} with no compute in between",
+                                lo, hi, w.pc
+                            ),
+                        ),
+                        1 => ctx.diag(
+                            Severity::Warning,
+                            Pass::Hazard,
+                            "hazard.single-buffer",
+                            pc,
+                            format!(
+                                "load rewrites local [{:#x}, {:#x}) while the compute consuming the pc-{} load \
+                                 may still be in flight (single buffering; insert a sync or a second slot)",
+                                lo, hi, w.pc
+                            ),
+                        ),
+                        _ => {}
+                    }
+                }
+                pending.retain(|w| !(w.lo < hi && lo < w.hi));
+                pending.push(PendingWrite { pc, lo, hi, age: 0 });
+            }
+            Instr::DmpaStore { .. } | Instr::DmaStore { .. } => {
+                if computes_since_sync > 0 {
+                    ctx.diag(
+                        Severity::Error,
+                        Pass::Hazard,
+                        "hazard.store-race",
+                        pc,
+                        format!(
+                            "store issued with {computes_since_sync} compute op(s) in flight since the last \
+                             sync — the accumulator drain may not have completed"
+                        ),
+                    );
+                }
+            }
+            Instr::Sync => {
+                pending.clear();
+                computes_since_sync = 0;
+            }
+            ref i if i.engine() == Engine::Compute => {
+                for w in &mut pending {
+                    w.age += 1;
+                }
+                computes_since_sync += 1;
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::ArchConfig;
+    use crate::isa::{Instr, Program, Space};
+    use crate::verify::{verify_programs, VerifyPolicy, VerifyReport};
+
+    fn load(dst_addr: u32, bytes: u32) -> Instr {
+        Instr::DmpaLoad { src: Space::L2Bottom, src_addr: 0, dst_addr, bytes }
+    }
+
+    fn conv() -> Instr {
+        Instr::ConvTile { m: 8, k: 8, n: 8, first: true, last: true }
+    }
+
+    fn verify(body: Vec<Instr>) -> VerifyReport {
+        let mut instrs = vec![Instr::LayerMark { id: 0 }];
+        instrs.extend(body);
+        instrs.push(Instr::Sync);
+        instrs.push(Instr::Halt);
+        verify_programs(&[Program { instrs }], &ArchConfig::j3dai(), &VerifyPolicy::default())
+    }
+
+    fn codes(r: &VerifyReport) -> Vec<&'static str> {
+        r.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn back_to_back_load_same_buffer_is_clobber() {
+        let r = verify(vec![load(0, 1024), load(0, 1024), Instr::Sync, conv()]);
+        assert!(codes(&r).contains(&"hazard.clobber"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn single_buffer_rewrite_warns() {
+        let r = verify(vec![load(0, 1024), conv(), load(0, 1024), Instr::Sync, conv()]);
+        assert!(r.is_clean(), "{}", r.render_text());
+        assert!(codes(&r).contains(&"hazard.single-buffer"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn double_buffering_is_clean() {
+        // ping-pong: two slots, each rewritten only after >= 2 computes
+        let r = verify(vec![
+            load(0, 1024),
+            load(0x1000, 1024),
+            conv(),
+            conv(),
+            load(0, 1024),
+            conv(),
+            conv(),
+            Instr::Sync,
+        ]);
+        assert!(r.is_clean(), "{}", r.render_text());
+        assert_eq!(r.warning_count(), 0, "{}", r.render_text());
+    }
+
+    #[test]
+    fn sync_retires_pending_writes() {
+        let r = verify(vec![load(0, 1024), Instr::Sync, load(0, 1024), Instr::Sync, conv()]);
+        assert!(r.is_clean(), "{}", r.render_text());
+        assert_eq!(r.warning_count(), 0, "{}", r.render_text());
+    }
+
+    #[test]
+    fn store_with_inflight_compute_is_error() {
+        let r = verify(vec![
+            load(0, 1024),
+            Instr::Sync,
+            conv(),
+            Instr::DmpaStore { dst: Space::L2Bottom, dst_addr: 0, src_addr: 0, bytes: 64 },
+            Instr::Sync,
+        ]);
+        assert!(codes(&r).contains(&"hazard.store-race"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn streamed_oversize_window_is_untracked() {
+        let cap = ArchConfig::j3dai().cluster_local_bytes() as u32;
+        // both windows run past the SRAM top -> streamed, no race tracked
+        let r = verify(vec![load(0, cap + 64), load(0, cap + 64), Instr::Sync, conv()]);
+        assert!(r.is_clean(), "{}", r.render_text());
+        assert!(!codes(&r).contains(&"hazard.clobber"), "{}", r.render_text());
+    }
+}

@@ -1,0 +1,276 @@
+//! Static program verifier — multi-pass analysis over compiled
+//! [`Program`]s, parameterized by the [`ArchConfig`] the programs were
+//! compiled for.
+//!
+//! The cluster controller blindly sequences whatever macro-op stream the
+//! compiler hands it: an out-of-bounds transfer, a ConvTile chain that
+//! drops its requant slice, or an Xfer/Compute overlap that races on a
+//! local buffer silently produces wrong pixels or wrong PPA numbers.
+//! This module is the correctness backstop: four passes walk each cluster
+//! program and report [`Diagnostic`]s —
+//!
+//! - [`bounds`]    — transfer windows vs the L2 arena and NCB-local SRAM
+//!   capacity, TSV-crossing transfers flagged per [`VerifyPolicy`];
+//! - [`hazard`]    — abstract interpretation of the two-engine overlap
+//!   across `Sync` barriers: WAR/WAW races on resident local-SRAM buffers
+//!   (double-buffering violations) and stores racing in-flight computes;
+//! - [`protocol`]  — the ConvTile `first`/`last` accumulator-chain state
+//!   machine, int32 accumulator overflow bounds, AIU loop-register
+//!   discipline and dead `RouteCfg`;
+//! - [`structure`] — missing/duplicated `Halt`, unreachable code, and
+//!   instructions outside any `LayerMark` scope (breaks telemetry
+//!   attribution).
+//!
+//! `compiler::codegen::emit` runs the verifier as a debug assertion, so
+//! every sim/test path in a debug build self-checks its programs for free;
+//! the `lint` CLI subcommand runs it on demand with human-table, JSON and
+//! SARIF output (see docs/VERIFIER.md).
+
+pub mod bounds;
+pub mod hazard;
+pub mod protocol;
+pub mod sarif;
+pub mod structure;
+
+use std::fmt;
+
+use crate::config::ArchConfig;
+use crate::isa::Program;
+
+/// Diagnostic severity. Only `Error` fails the `lint` gate by default;
+/// warnings gate under `--deny-warnings`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Note,
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Note => "note",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Which analysis pass produced a diagnostic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    Bounds,
+    Hazard,
+    Protocol,
+    Structure,
+}
+
+impl Pass {
+    pub fn label(self) -> &'static str {
+        match self {
+            Pass::Bounds => "bounds",
+            Pass::Hazard => "hazard",
+            Pass::Protocol => "protocol",
+            Pass::Structure => "structure",
+        }
+    }
+}
+
+/// One finding: severity, producing pass, a stable rule code (the SARIF
+/// ruleId), the cluster/pc it anchors to, a message, and a rendered
+/// listing window around the offending instruction.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub pass: Pass,
+    /// Stable rule id, e.g. `bounds.local-oob`.
+    pub code: &'static str,
+    /// Index of the cluster program the diagnostic is in.
+    pub cluster: usize,
+    /// Program counter (instruction index) the diagnostic anchors to.
+    pub pc: usize,
+    pub message: String,
+    /// Listing context around `pc` (the offending line marked with `->`).
+    pub context: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] cluster {} pc {}: {}",
+            self.severity.label(),
+            self.code,
+            self.cluster,
+            self.pc,
+            self.message
+        )
+    }
+}
+
+/// Policy knobs for a verification run.
+#[derive(Debug, Clone)]
+pub struct VerifyPolicy {
+    /// Emit a note for every TSV-crossing transfer. Off by default: the
+    /// paper's placement legitimately spills parameters to the middle die,
+    /// but an energy audit wants the crossings enumerated.
+    pub flag_tsv: bool,
+    /// Listing lines of context on each side of a diagnosed instruction.
+    pub context_lines: usize,
+}
+
+impl Default for VerifyPolicy {
+    fn default() -> Self {
+        VerifyPolicy { flag_tsv: false, context_lines: 2 }
+    }
+}
+
+/// All diagnostics from verifying a set of cluster programs.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl VerifyReport {
+    pub fn count(&self, s: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == s).count()
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.count(Severity::Warning)
+    }
+
+    pub fn note_count(&self) -> usize {
+        self.count(Severity::Note)
+    }
+
+    /// True when no error-severity diagnostics were produced.
+    pub fn is_clean(&self) -> bool {
+        self.error_count() == 0
+    }
+
+    /// Plain-text rendering: one block per diagnostic with its listing
+    /// context (the `lint --context` / debug-assert failure format).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            s.push_str(&format!("{d}\n"));
+            for line in d.context.lines() {
+                s.push_str(&format!("    {line}\n"));
+            }
+        }
+        s
+    }
+}
+
+/// Shared pass state: the program under analysis plus the diagnostic sink.
+pub(crate) struct Ctx<'a> {
+    pub prog: &'a Program,
+    pub cluster: usize,
+    pub cfg: &'a ArchConfig,
+    pub policy: &'a VerifyPolicy,
+    pub out: Vec<Diagnostic>,
+}
+
+impl Ctx<'_> {
+    pub(crate) fn diag(&mut self, severity: Severity, pass: Pass, code: &'static str, pc: usize, message: String) {
+        let context = listing_window(self.prog, pc, self.policy.context_lines);
+        self.out.push(Diagnostic { severity, pass, code, cluster: self.cluster, pc, message, context });
+    }
+}
+
+/// Render the listing lines around `pc`, marking the diagnosed one.
+fn listing_window(p: &Program, pc: usize, n: usize) -> String {
+    let lo = pc.saturating_sub(n);
+    let hi = (pc + n + 1).min(p.instrs.len());
+    let mut s = String::new();
+    for i in lo..hi {
+        let mark = if i == pc { "->" } else { "  " };
+        s.push_str(&format!("{mark} {i:5}: {}\n", p.instrs[i]));
+    }
+    s
+}
+
+/// Run all four passes over one cluster program.
+pub fn verify_program(prog: &Program, cluster: usize, cfg: &ArchConfig, policy: &VerifyPolicy) -> Vec<Diagnostic> {
+    let mut ctx = Ctx { prog, cluster, cfg, policy, out: Vec::new() };
+    bounds::run(&mut ctx);
+    hazard::run(&mut ctx);
+    protocol::run(&mut ctx);
+    structure::run(&mut ctx);
+    let mut out = ctx.out;
+    out.sort_by_key(|d| (d.pc, std::cmp::Reverse(d.severity)));
+    out
+}
+
+/// Run the verifier over every cluster program of a compiled model.
+pub fn verify_programs(progs: &[Program], cfg: &ArchConfig, policy: &VerifyPolicy) -> VerifyReport {
+    let mut report = VerifyReport::default();
+    for (ci, p) in progs.iter().enumerate() {
+        report.diagnostics.extend(verify_program(p, ci, cfg, policy));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Instr, Space};
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::j3dai()
+    }
+
+    fn verify(instrs: Vec<Instr>) -> VerifyReport {
+        verify_programs(&[Program { instrs }], &cfg(), &VerifyPolicy::default())
+    }
+
+    #[test]
+    fn minimal_clean_program() {
+        let r = verify(vec![
+            Instr::LayerMark { id: 0 },
+            Instr::DmpaLoad { src: Space::L2Bottom, src_addr: 0, dst_addr: 0, bytes: 1024 },
+            Instr::Sync,
+            Instr::ConvTile { m: 8, k: 8, n: 8, first: true, last: true },
+            Instr::Sync,
+            Instr::DmpaStore { dst: Space::L2Bottom, dst_addr: 0x1000, src_addr: 0, bytes: 64 },
+            Instr::Sync,
+            Instr::Halt,
+        ]);
+        assert!(r.is_clean(), "{}", r.render_text());
+        assert_eq!(r.diagnostics.len(), 0, "{}", r.render_text());
+    }
+
+    #[test]
+    fn diagnostics_render_with_context() {
+        let r = verify(vec![Instr::LayerMark { id: 0 }, Instr::Sync]);
+        // missing halt
+        assert_eq!(r.error_count(), 1);
+        let d = &r.diagnostics[0];
+        assert_eq!(d.pass, Pass::Structure);
+        assert!(d.to_string().contains("structure.missing-halt"), "{d}");
+        assert!(d.context.contains("->"), "{}", d.context);
+        assert!(r.render_text().contains("sync"));
+    }
+
+    #[test]
+    fn tsv_policy_flags_crossings() {
+        let instrs = vec![
+            Instr::LayerMark { id: 0 },
+            Instr::DmaLoad { src: Space::L2Middle, src_addr: 0, dst_addr: 0, bytes: 64 },
+            Instr::Sync,
+            Instr::Halt,
+        ];
+        let p = Program { instrs };
+        let quiet = verify_programs(&[p.clone()], &cfg(), &VerifyPolicy::default());
+        assert_eq!(quiet.note_count(), 0);
+        let flagged =
+            verify_programs(&[p], &cfg(), &VerifyPolicy { flag_tsv: true, ..VerifyPolicy::default() });
+        assert_eq!(flagged.note_count(), 1);
+        assert!(flagged.is_clean());
+    }
+}

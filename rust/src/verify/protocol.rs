@@ -1,0 +1,326 @@
+//! Compute-protocol pass — the rules the NCB datapath imposes on the
+//! compute stream.
+//!
+//! A GEMM larger than one tile runs as a ConvTile *chain*: `first` clears
+//! the int32 accumulators, intermediate tiles accumulate, `last` drains
+//! them through the fused requant path back to int8. A chain that never
+//! sees `last` leaves int32 partials nothing will requant; a tile with
+//! `first` while a chain is open silently discards the open partials; a
+//! chain whose m/n change mid-flight accumulates mismatched shapes. The
+//! accumulated `k` across the chain also bounds accumulator magnitude:
+//! int8 x int8 products are at most 127*128 = 16256, so k_total tiles of
+//! worst-case products overflow i32 once k_total > i32::MAX / 16384.
+//!
+//! The pass also checks AIU loop-register discipline (registers
+//! configured in order, non-zero trip counts) and routing: with the AIU
+//! disabled, the spatially-routed tiles (ConvTile/DwTile/AddTile) need an
+//! explicit `RouteCfg` in scope, while with the AIU enabled a `RouteCfg`
+//! is dead weight the AIU ignores (§III-B2). ActTile/PoolTile run on the
+//! fixed-function NLU/pooling path and never need routing.
+
+use super::{Ctx, Pass, Severity};
+use crate::isa::{Instr, NUM_AIU_LOOP_REGS};
+
+/// Conservative chain-k bound: int8 x int8 products reach 127*128 < 2^14,
+/// so i32 accumulation is safe while k_total <= i32::MAX / 2^14 = 131071.
+pub const MAX_CHAIN_K: u64 = (i32::MAX as u64) >> 14;
+
+struct Chain {
+    start_pc: usize,
+    m: u32,
+    n: u32,
+    k_total: u64,
+}
+
+pub(crate) fn run(ctx: &mut Ctx<'_>) {
+    let mut chain: Option<Chain> = None;
+    let mut loops_set: u32 = 0; // bitmask of AIU regs configured in scope
+    let mut routed = false;
+    let n = ctx.prog.instrs.len();
+    for pc in 0..n {
+        match ctx.prog.instrs[pc] {
+            Instr::ConvTile { m, k, n, first, last } => {
+                match (&mut chain, first) {
+                    (None, true) => {
+                        chain = Some(Chain { start_pc: pc, m, n, k_total: k as u64 });
+                    }
+                    (None, false) => {
+                        ctx.diag(
+                            Severity::Error,
+                            Pass::Protocol,
+                            "protocol.chain-missing-first",
+                            pc,
+                            "ConvTile accumulates without `first` — reads uninitialized int32 accumulators"
+                                .into(),
+                        );
+                        chain = Some(Chain { start_pc: pc, m, n, k_total: k as u64 });
+                    }
+                    (Some(c), true) => {
+                        ctx.diag(
+                            Severity::Error,
+                            Pass::Protocol,
+                            "protocol.chain-dangling",
+                            pc,
+                            format!(
+                                "`first` discards the open accumulator chain started at pc {} \
+                                 (its partials were never requantized with `last`)",
+                                c.start_pc
+                            ),
+                        );
+                        chain = Some(Chain { start_pc: pc, m, n, k_total: k as u64 });
+                    }
+                    (Some(c), false) => {
+                        if c.m != m || c.n != n {
+                            ctx.diag(
+                                Severity::Error,
+                                Pass::Protocol,
+                                "protocol.chain-shape",
+                                pc,
+                                format!(
+                                    "chain tile is {m}x{n} but the chain started at pc {} is {}x{}",
+                                    c.start_pc, c.m, c.n
+                                ),
+                            );
+                        }
+                        c.k_total += k as u64;
+                    }
+                }
+                if last {
+                    if let Some(c) = chain.take() {
+                        if c.k_total > MAX_CHAIN_K {
+                            ctx.diag(
+                                Severity::Error,
+                                Pass::Protocol,
+                                "protocol.acc-overflow",
+                                pc,
+                                format!(
+                                    "accumulator chain sums k_total={} int8 products; beyond {MAX_CHAIN_K} \
+                                     the int32 accumulator can overflow before requant",
+                                    c.k_total
+                                ),
+                            );
+                        }
+                    }
+                }
+                check_routing(ctx, pc, &mut routed);
+            }
+            Instr::DwTile { .. } | Instr::AddTile { .. } => {
+                break_chain(ctx, &mut chain, pc);
+                check_routing(ctx, pc, &mut routed);
+            }
+            Instr::ActTile { .. } | Instr::PoolTile { .. } => {
+                // fixed-function NLU / pooling path — no routing needed
+                break_chain(ctx, &mut chain, pc);
+            }
+            Instr::AiuLoop { reg, count, .. } => {
+                if !ctx.cfg.aiu_enabled {
+                    ctx.diag(
+                        Severity::Warning,
+                        Pass::Protocol,
+                        "protocol.aiu-disabled",
+                        pc,
+                        "aiu.loop configured but the AIU is disabled in this ArchConfig (ignored)".into(),
+                    );
+                }
+                if reg >= NUM_AIU_LOOP_REGS {
+                    ctx.diag(
+                        Severity::Error,
+                        Pass::Protocol,
+                        "protocol.bad-loop-reg",
+                        pc,
+                        format!("AIU loop register r{reg} out of range 0..{NUM_AIU_LOOP_REGS}"),
+                    );
+                } else {
+                    if reg > 0 && loops_set & (1 << (reg - 1)) == 0 {
+                        ctx.diag(
+                            Severity::Warning,
+                            Pass::Protocol,
+                            "protocol.loop-order",
+                            pc,
+                            format!(
+                                "loop register r{reg} configured before r{} — the AIU nests loops \
+                                 outermost-first",
+                                reg - 1
+                            ),
+                        );
+                    }
+                    loops_set |= 1 << reg;
+                }
+                if count == 0 {
+                    ctx.diag(
+                        Severity::Warning,
+                        Pass::Protocol,
+                        "protocol.empty-loop",
+                        pc,
+                        format!("loop register r{reg} has a zero trip count"),
+                    );
+                }
+            }
+            Instr::RouteCfg { .. } => {
+                if ctx.cfg.aiu_enabled {
+                    ctx.diag(
+                        Severity::Warning,
+                        Pass::Protocol,
+                        "protocol.dead-routecfg",
+                        pc,
+                        "route.cfg is dead with the AIU enabled — the AIU drives routing itself".into(),
+                    );
+                }
+                routed = true;
+            }
+            Instr::LayerMark { .. } => {
+                break_chain(ctx, &mut chain, pc);
+                loops_set = 0;
+                routed = false;
+            }
+            Instr::Sync | Instr::Halt => break_chain(ctx, &mut chain, pc),
+            _ => {}
+        }
+    }
+    if let Some(c) = chain {
+        ctx.diag(
+            Severity::Error,
+            Pass::Protocol,
+            "protocol.chain-broken",
+            n.saturating_sub(1),
+            format!(
+                "program ends with the accumulator chain started at pc {} still open (no `last` tile)",
+                c.start_pc
+            ),
+        );
+    }
+}
+
+/// Anything that is not a non-`last` chain tile closes an open chain: the
+/// partials it held are lost without a requant drain.
+fn break_chain(ctx: &mut Ctx<'_>, chain: &mut Option<Chain>, pc: usize) {
+    if let Some(c) = chain.take() {
+        ctx.diag(
+            Severity::Error,
+            Pass::Protocol,
+            "protocol.chain-broken",
+            pc,
+            format!(
+                "{} interrupts the accumulator chain started at pc {} before its `last` tile",
+                ctx.prog.instrs[pc].mnemonic(),
+                c.start_pc
+            ),
+        );
+    }
+}
+
+/// With the AIU off, a spatially-routed tile needs a RouteCfg in scope.
+fn check_routing(ctx: &mut Ctx<'_>, pc: usize, routed: &mut bool) {
+    if !ctx.cfg.aiu_enabled && !*routed {
+        ctx.diag(
+            Severity::Error,
+            Pass::Protocol,
+            "protocol.unrouted-tile",
+            pc,
+            format!(
+                "{} issued with the AIU disabled and no route.cfg in scope — the NCB routing \
+                 fabric is unconfigured",
+                ctx.prog.instrs[pc].mnemonic()
+            ),
+        );
+        // suppress a cascade: one diagnostic per unrouted scope
+        *routed = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::MAX_CHAIN_K;
+    use crate::config::ArchConfig;
+    use crate::isa::{Instr, Program};
+    use crate::verify::{verify_programs, VerifyPolicy, VerifyReport};
+
+    fn conv(first: bool, last: bool) -> Instr {
+        Instr::ConvTile { m: 8, k: 64, n: 8, first, last }
+    }
+
+    fn verify_with(cfg: &ArchConfig, body: Vec<Instr>) -> VerifyReport {
+        let mut instrs = vec![Instr::LayerMark { id: 0 }];
+        instrs.extend(body);
+        instrs.push(Instr::Sync);
+        instrs.push(Instr::Halt);
+        verify_programs(&[Program { instrs }], cfg, &VerifyPolicy::default())
+    }
+
+    fn verify(body: Vec<Instr>) -> VerifyReport {
+        verify_with(&ArchConfig::j3dai(), body)
+    }
+
+    fn codes(r: &VerifyReport) -> Vec<&'static str> {
+        r.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn well_formed_chain_is_clean() {
+        let r = verify(vec![conv(true, false), conv(false, false), conv(false, true)]);
+        assert!(r.is_clean(), "{}", r.render_text());
+        assert_eq!(r.diagnostics.len(), 0, "{}", r.render_text());
+    }
+
+    #[test]
+    fn missing_first_and_dangling_chain_flagged() {
+        let r = verify(vec![conv(false, true)]);
+        assert!(codes(&r).contains(&"protocol.chain-missing-first"), "{}", r.render_text());
+        let r = verify(vec![conv(true, false), conv(true, true)]);
+        assert!(codes(&r).contains(&"protocol.chain-dangling"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn sync_breaks_an_open_chain() {
+        let r = verify(vec![conv(true, false), Instr::Sync, conv(false, true)]);
+        assert!(codes(&r).contains(&"protocol.chain-broken"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn chain_shape_mismatch_flagged() {
+        let r = verify(vec![
+            conv(true, false),
+            Instr::ConvTile { m: 16, k: 64, n: 8, first: false, last: true },
+        ]);
+        assert!(codes(&r).contains(&"protocol.chain-shape"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn accumulator_overflow_bound() {
+        let k = (MAX_CHAIN_K + 1) as u32;
+        let r = verify(vec![Instr::ConvTile { m: 8, k, n: 8, first: true, last: true }]);
+        assert!(codes(&r).contains(&"protocol.acc-overflow"), "{}", r.render_text());
+        let r = verify(vec![Instr::ConvTile { m: 8, k: k - 1, n: 8, first: true, last: true }]);
+        assert!(r.is_clean(), "{}", r.render_text());
+    }
+
+    #[test]
+    fn loop_register_discipline() {
+        let r = verify(vec![Instr::AiuLoop { reg: 1, count: 4, stride: 1 }]);
+        assert!(codes(&r).contains(&"protocol.loop-order"), "{}", r.render_text());
+        let r = verify(vec![Instr::AiuLoop { reg: 0, count: 0, stride: 1 }]);
+        assert!(codes(&r).contains(&"protocol.empty-loop"), "{}", r.render_text());
+        let r = verify(vec![
+            Instr::AiuLoop { reg: 0, count: 4, stride: 1 },
+            Instr::AiuLoop { reg: 1, count: 4, stride: 1 },
+        ]);
+        assert_eq!(r.diagnostics.len(), 0, "{}", r.render_text());
+    }
+
+    #[test]
+    fn routing_rules_follow_aiu_setting() {
+        let mut off = ArchConfig::j3dai();
+        off.aiu_enabled = false;
+        let r = verify_with(&off, vec![conv(true, true)]);
+        assert!(codes(&r).contains(&"protocol.unrouted-tile"), "{}", r.render_text());
+        let r = verify_with(&off, vec![Instr::RouteCfg { pattern: 0 }, conv(true, true)]);
+        assert!(r.is_clean(), "{}", r.render_text());
+        assert_eq!(r.warning_count(), 0, "{}", r.render_text());
+        // with the AIU on, RouteCfg is dead weight
+        let r = verify(vec![Instr::RouteCfg { pattern: 0 }, conv(true, true)]);
+        assert!(codes(&r).contains(&"protocol.dead-routecfg"), "{}", r.render_text());
+        // ActTile never needs routing
+        let r = verify_with(&off, vec![Instr::ActTile { n: 64, nlu: true }]);
+        assert!(r.is_clean(), "{}", r.render_text());
+    }
+}

@@ -1,0 +1,156 @@
+//! Diagnostic exporters — SARIF 2.1.0 (the static-analysis interchange
+//! format CI systems ingest) and a plain JSON summary.
+//!
+//! One SARIF `run` per verified model; each diagnostic becomes a `result`
+//! whose `ruleId` is the stable verifier rule code and whose location
+//! points at a virtual listing artifact `<model>/cluster<N>.j3dai-asm`
+//! with `startLine = pc + 1` (the listing is line-per-instruction, so a
+//! SARIF viewer lands on the offending macro-op).
+
+use std::collections::BTreeSet;
+
+use super::{Diagnostic, Severity, VerifyReport};
+use crate::telemetry::json::escape;
+
+impl Severity {
+    /// SARIF `level` for this severity.
+    pub fn sarif_level(self) -> &'static str {
+        match self {
+            Severity::Note => "note",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+fn sarif_result(model: &str, d: &Diagnostic) -> String {
+    let uri = format!("{}/cluster{}.j3dai-asm", escape(model), d.cluster);
+    format!(
+        concat!(
+            "{{\"ruleId\":\"{}\",\"level\":\"{}\",\"message\":{{\"text\":\"{}\"}},",
+            "\"locations\":[{{\"physicalLocation\":{{\"artifactLocation\":{{\"uri\":\"{}\"}},",
+            "\"region\":{{\"startLine\":{}}}}}}}],",
+            "\"properties\":{{\"pass\":\"{}\",\"cluster\":{},\"pc\":{}}}}}"
+        ),
+        d.code,
+        d.severity.sarif_level(),
+        escape(&d.message),
+        uri,
+        d.pc + 1,
+        d.pass.label(),
+        d.cluster,
+        d.pc,
+    )
+}
+
+/// Render one SARIF 2.1.0 document with one run per `(model, report)`.
+pub fn to_sarif(reports: &[(String, VerifyReport)]) -> String {
+    let mut runs = Vec::new();
+    for (model, report) in reports {
+        let rules: BTreeSet<&'static str> = report.diagnostics.iter().map(|d| d.code).collect();
+        let rules_json: Vec<String> = rules.iter().map(|r| format!("{{\"id\":\"{r}\"}}")).collect();
+        let results: Vec<String> =
+            report.diagnostics.iter().map(|d| sarif_result(model, d)).collect();
+        runs.push(format!(
+            concat!(
+                "{{\"tool\":{{\"driver\":{{\"name\":\"j3dai-verify\",",
+                "\"informationUri\":\"docs/VERIFIER.md\",\"rules\":[{}]}}}},",
+                "\"properties\":{{\"model\":\"{}\"}},",
+                "\"results\":[{}]}}"
+            ),
+            rules_json.join(","),
+            escape(model),
+            results.join(","),
+        ));
+    }
+    format!(
+        concat!(
+            "{{\"$schema\":\"https://json.schemastore.org/sarif-2.1.0.json\",",
+            "\"version\":\"2.1.0\",\"runs\":[{}]}}"
+        ),
+        runs.join(",")
+    )
+}
+
+/// Plain JSON summary (the `lint --json` payload).
+pub fn to_json(reports: &[(String, VerifyReport)]) -> String {
+    let mut models = Vec::new();
+    for (model, report) in reports {
+        let diags: Vec<String> = report
+            .diagnostics
+            .iter()
+            .map(|d| {
+                format!(
+                    concat!(
+                        "{{\"severity\":\"{}\",\"pass\":\"{}\",\"rule\":\"{}\",",
+                        "\"cluster\":{},\"pc\":{},\"message\":\"{}\"}}"
+                    ),
+                    d.severity.label(),
+                    d.pass.label(),
+                    d.code,
+                    d.cluster,
+                    d.pc,
+                    escape(&d.message),
+                )
+            })
+            .collect();
+        models.push(format!(
+            "{{\"model\":\"{}\",\"errors\":{},\"warnings\":{},\"notes\":{},\"diagnostics\":[{}]}}",
+            escape(model),
+            report.error_count(),
+            report.warning_count(),
+            report.note_count(),
+            diags.join(","),
+        ));
+    }
+    format!("{{\"models\":[{}]}}", models.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::isa::{Instr, Program};
+    use crate::telemetry::json::Json;
+    use crate::verify::{verify_programs, VerifyPolicy};
+
+    fn report_with_findings() -> VerifyReport {
+        // missing halt + unattributed work -> at least one error, one warning
+        verify_programs(
+            &[Program { instrs: vec![Instr::AddTile { n: 4 }] }],
+            &ArchConfig::j3dai(),
+            &VerifyPolicy::default(),
+        )
+    }
+
+    #[test]
+    fn sarif_is_valid_json_with_schema_and_rules() {
+        let reports = vec![("mbv1".to_string(), report_with_findings())];
+        let doc = Json::parse(&to_sarif(&reports)).unwrap();
+        assert_eq!(doc.get("version").unwrap().as_str(), Some("2.1.0"));
+        let runs = doc.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 1);
+        let results = runs[0].get("results").unwrap().as_arr().unwrap();
+        assert!(!results.is_empty());
+        assert!(results[0].get("ruleId").unwrap().as_str().unwrap().contains('.'));
+    }
+
+    #[test]
+    fn json_summary_counts_match_report() {
+        let rep = report_with_findings();
+        let (errs, warns) = (rep.error_count(), rep.warning_count());
+        let doc = Json::parse(&to_json(&[("seg".to_string(), rep)])).unwrap();
+        let models = doc.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models[0].get("errors").unwrap().as_f64().unwrap() as usize, errs);
+        assert_eq!(models[0].get("warnings").unwrap().as_f64().unwrap() as usize, warns);
+    }
+
+    #[test]
+    fn clean_report_renders_empty_results() {
+        let doc = to_sarif(&[("mbv2".to_string(), VerifyReport::default())]);
+        let parsed = Json::parse(&doc).unwrap();
+        let runs = parsed.get("runs").unwrap().as_arr().unwrap();
+        let results = runs[0].get("results").unwrap().as_arr().unwrap();
+        assert!(results.is_empty());
+    }
+}

@@ -1,0 +1,96 @@
+//! Structure pass — whole-program shape rules.
+//!
+//! Every cluster program must end in exactly one `Halt` (the host-interrupt
+//! handshake the runtime blocks on); anything after the first `Halt` never
+//! executes; and work issued before the first `LayerMark` cannot be
+//! attributed to a graph layer, which silently corrupts the telemetry
+//! spans and the per-layer energy/latency tables.
+
+use super::{Ctx, Pass, Severity};
+use crate::isa::{Engine, Instr};
+
+pub(crate) fn run(ctx: &mut Ctx<'_>) {
+    let n = ctx.prog.instrs.len();
+    let halt = ctx.prog.instrs.iter().position(|i| *i == Instr::Halt);
+    match halt {
+        None => ctx.diag(
+            Severity::Error,
+            Pass::Structure,
+            "structure.missing-halt",
+            n.saturating_sub(1),
+            "program never halts — the host interrupt is never raised".into(),
+        ),
+        Some(h) if h + 1 < n => ctx.diag(
+            Severity::Error,
+            Pass::Structure,
+            "structure.unreachable",
+            h + 1,
+            format!("{} instruction(s) after halt are unreachable", n - h - 1),
+        ),
+        Some(_) => {}
+    }
+    for pc in 0..n {
+        match ctx.prog.instrs[pc] {
+            Instr::LayerMark { .. } => break,
+            ref i if i.engine() != Engine::Control => {
+                ctx.diag(
+                    Severity::Warning,
+                    Pass::Structure,
+                    "structure.unattributed",
+                    pc,
+                    format!(
+                        "{} issued before any layer.mark — telemetry cannot attribute it to a layer",
+                        i.mnemonic()
+                    ),
+                );
+                break;
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::ArchConfig;
+    use crate::isa::{Instr, Program, Space};
+    use crate::verify::{verify_programs, VerifyPolicy, VerifyReport};
+
+    fn verify(instrs: Vec<Instr>) -> VerifyReport {
+        verify_programs(&[Program { instrs }], &ArchConfig::j3dai(), &VerifyPolicy::default())
+    }
+
+    fn codes(r: &VerifyReport) -> Vec<&'static str> {
+        r.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn missing_halt_flagged() {
+        let r = verify(vec![Instr::LayerMark { id: 0 }, Instr::Sync]);
+        assert!(codes(&r).contains(&"structure.missing-halt"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn code_after_halt_is_unreachable() {
+        let r = verify(vec![Instr::LayerMark { id: 0 }, Instr::Halt, Instr::Sync]);
+        assert!(codes(&r).contains(&"structure.unreachable"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn work_before_layer_mark_warns() {
+        let r = verify(vec![
+            Instr::DmpaLoad { src: Space::L2Bottom, src_addr: 0, dst_addr: 0, bytes: 64 },
+            Instr::LayerMark { id: 0 },
+            Instr::Sync,
+            Instr::Halt,
+        ]);
+        assert!(r.is_clean(), "{}", r.render_text());
+        assert!(codes(&r).contains(&"structure.unattributed"), "{}", r.render_text());
+    }
+
+    #[test]
+    fn empty_program_reports_missing_halt_once() {
+        let r = verify(vec![]);
+        assert_eq!(codes(&r), vec!["structure.missing-halt"]);
+    }
+}

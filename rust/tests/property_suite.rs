@@ -106,7 +106,7 @@ fn prop_isa_roundtrip() {
                 last: g.bool(),
             },
             2 => Instr::DwTile { h: g.u64() as u32, w: g.u64() as u32, c: g.u64() as u32, stride: g.usize_in(1, 2) as u8 },
-            3 => Instr::AiuLoop { reg: g.u8(), count: g.u64() as u32, stride: g.u64() as u32 },
+            3 => Instr::AiuLoop { reg: g.usize_in(0, 7) as u8, count: g.u64() as u32, stride: g.u64() as u32 },
             4 => Instr::AddTile { n: g.u64() as u32 },
             5 => Instr::Sync,
             _ => Instr::Halt,

@@ -1,0 +1,363 @@
+//! Verifier + ISA-hardening integration suite: exhaustive encode/decode
+//! round-trips over every `Instr` variant, the decode/disassemble error
+//! paths, clean verification of all three Table I workloads, and one
+//! mutation test per verifier pass on each workload (the corrupted
+//! program must produce an error-severity diagnostic, which is exactly
+//! what makes `j3dai lint` exit non-zero).
+
+use j3dai::compiler;
+use j3dai::config::ArchConfig;
+use j3dai::graph::Shape;
+use j3dai::isa::{Instr, Program, Space, NUM_AIU_LOOP_REGS};
+use j3dai::models;
+use j3dai::ptest::{check, Gen};
+use j3dai::telemetry::json::Json;
+use j3dai::verify::{sarif, verify_programs, VerifyPolicy, VerifyReport};
+
+fn space(g: &mut Gen) -> Space {
+    *g.pick(&[Space::L2Bottom, Space::L2Middle, Space::Local])
+}
+
+/// One random instance of each of the 14 `Instr` variants, by index.
+fn any_instr(g: &mut Gen, variant: usize) -> Instr {
+    match variant {
+        0 => Instr::DmpaLoad {
+            src: space(g),
+            src_addr: g.u64() as u32,
+            dst_addr: g.u64() as u32,
+            bytes: g.u64() as u32,
+        },
+        1 => Instr::DmpaStore {
+            dst: space(g),
+            dst_addr: g.u64() as u32,
+            src_addr: g.u64() as u32,
+            bytes: g.u64() as u32,
+        },
+        2 => Instr::DmaLoad {
+            src: space(g),
+            src_addr: g.u64() as u32,
+            dst_addr: g.u64() as u32,
+            bytes: g.u64() as u32,
+        },
+        3 => Instr::DmaStore {
+            dst: space(g),
+            dst_addr: g.u64() as u32,
+            src_addr: g.u64() as u32,
+            bytes: g.u64() as u32,
+        },
+        4 => Instr::AiuLoop {
+            reg: g.usize_in(0, NUM_AIU_LOOP_REGS as usize - 1) as u8,
+            count: g.u64() as u32,
+            stride: g.u64() as u32,
+        },
+        5 => Instr::RouteCfg { pattern: g.u8() },
+        6 => Instr::ConvTile {
+            m: g.u64() as u32,
+            k: g.u64() as u32,
+            n: g.u64() as u32,
+            first: g.bool(),
+            last: g.bool(),
+        },
+        7 => Instr::DwTile { h: g.u64() as u32, w: g.u64() as u32, c: g.u64() as u32, stride: g.u8() },
+        8 => Instr::AddTile { n: g.u64() as u32 },
+        9 => Instr::ActTile { n: g.u64() as u32, nlu: g.bool() },
+        10 => Instr::PoolTile { h: g.u64() as u32, w: g.u64() as u32, c: g.u64() as u32 },
+        11 => Instr::LayerMark { id: g.u64() as u32 },
+        12 => Instr::Sync,
+        _ => Instr::Halt,
+    }
+}
+
+#[test]
+fn fixed_instance_of_every_variant_roundtrips() {
+    // deterministic floor under the property test: one hand-picked
+    // instance per variant, covering all three spaces across transfers
+    let all = vec![
+        Instr::DmpaLoad { src: Space::L2Bottom, src_addr: 1, dst_addr: 2, bytes: 3 },
+        Instr::DmpaStore { dst: Space::L2Middle, dst_addr: 4, src_addr: 5, bytes: 6 },
+        Instr::DmaLoad { src: Space::Local, src_addr: 7, dst_addr: 8, bytes: 9 },
+        Instr::DmaStore { dst: Space::L2Bottom, dst_addr: 10, src_addr: 11, bytes: 12 },
+        Instr::AiuLoop { reg: NUM_AIU_LOOP_REGS - 1, count: 13, stride: 14 },
+        Instr::RouteCfg { pattern: 255 },
+        Instr::ConvTile { m: 15, k: 16, n: 17, first: true, last: false },
+        Instr::DwTile { h: 18, w: 19, c: 20, stride: 2 },
+        Instr::AddTile { n: 21 },
+        Instr::ActTile { n: 22, nlu: true },
+        Instr::PoolTile { h: 23, w: 24, c: 25 },
+        Instr::LayerMark { id: 26 },
+        Instr::Sync,
+        Instr::Halt,
+    ];
+    for instr in all {
+        let decoded = Instr::decode(&instr.encode()).unwrap();
+        assert_eq!(instr, decoded);
+    }
+}
+
+#[test]
+fn prop_every_instr_variant_roundtrips() {
+    // random field values over a uniformly drawn variant index
+    check("instr-roundtrip-exhaustive", 140, |g| {
+        let variant = g.usize_in(0, 13);
+        let instr = any_instr(g, variant);
+        let decoded = Instr::decode(&instr.encode()).unwrap();
+        assert_eq!(instr, decoded, "variant {variant}");
+    });
+}
+
+#[test]
+fn prop_programs_of_any_variants_roundtrip_binary() {
+    check("program-roundtrip", 40, |g| {
+        let mut instrs: Vec<Instr> = (0..g.usize_in(0, 30))
+            .map(|_| {
+                // everything except Halt mid-program (trailing garbage rule)
+                let v = g.usize_in(0, 12);
+                any_instr(g, v)
+            })
+            .collect();
+        instrs.push(Instr::Halt);
+        let p = Program { instrs };
+        let q = Program::disassemble(&p.assemble()).unwrap();
+        assert_eq!(p.instrs, q.instrs);
+    });
+}
+
+#[test]
+fn decode_rejects_bad_discriminants_naming_offsets() {
+    // unknown opcode -> byte offset 0
+    let mut w = [0u8; 16];
+    w[0] = 0x7f;
+    let e = Instr::decode(&w).unwrap_err().to_string();
+    assert!(e.contains("unknown opcode") && e.contains("byte offset 0"), "{e}");
+
+    // bad space code -> byte offset 1
+    let mut w = [0u8; 16];
+    w[0] = 0x01; // DmpaLoad
+    w[1] = 9;
+    let e = Instr::decode(&w).unwrap_err().to_string();
+    assert!(e.contains("space code 9") && e.contains("byte offset 1"), "{e}");
+
+    // AIU loop register out of range -> byte offset 1
+    let mut w = [0u8; 16];
+    w[0] = 0x05; // AiuLoop
+    w[1] = NUM_AIU_LOOP_REGS;
+    let e = Instr::decode(&w).unwrap_err().to_string();
+    assert!(e.contains("loop register") && e.contains("byte offset 1"), "{e}");
+
+    // ConvTile flag bits beyond first|last -> byte offset 1
+    let mut w = [0u8; 16];
+    w[0] = 0x10; // ConvTile
+    w[1] = 0b100;
+    let e = Instr::decode(&w).unwrap_err().to_string();
+    assert!(e.contains("flag bits") && e.contains("byte offset 1"), "{e}");
+
+    // ActTile nlu byte must be 0/1
+    let mut w = [0u8; 16];
+    w[0] = 0x13; // ActTile
+    w[1] = 2;
+    let e = Instr::decode(&w).unwrap_err().to_string();
+    assert!(e.contains("nlu byte") && e.contains("byte offset 1"), "{e}");
+}
+
+#[test]
+fn disassemble_rejects_misaligned_and_trailing_input() {
+    // not a multiple of 16
+    let p = Program { instrs: vec![Instr::Sync, Instr::Halt] };
+    let mut bin = p.assemble();
+    bin.push(0);
+    let e = Program::disassemble(&bin).unwrap_err().to_string();
+    assert!(e.contains("not a multiple"), "{e}");
+
+    // trailing garbage after halt
+    let p = Program { instrs: vec![Instr::Sync, Instr::Halt, Instr::Sync] };
+    let e = Program::disassemble(&p.assemble()).unwrap_err().to_string();
+    assert!(e.contains("after halt"), "{e}");
+
+    // a corrupt word names its word/byte offset
+    let p = Program { instrs: vec![Instr::Sync, Instr::Halt] };
+    let mut bin = p.assemble();
+    bin[0] = 0xee; // clobber word 0's opcode
+    let e = format!("{:#}", Program::disassemble(&bin).unwrap_err());
+    assert!(e.contains("word 0") && e.contains("unknown opcode"), "{e}");
+}
+
+fn paper_workloads() -> Vec<j3dai::graph::Graph> {
+    vec![models::paper_mbv1(), models::paper_mbv2(), models::paper_seg()]
+}
+
+fn compile_programs(g: &j3dai::graph::Graph, cfg: &ArchConfig) -> Vec<Program> {
+    compiler::compile(g, cfg).unwrap().cluster_programs
+}
+
+fn verify(progs: &[Program], cfg: &ArchConfig) -> VerifyReport {
+    verify_programs(progs, cfg, &VerifyPolicy::default())
+}
+
+#[test]
+fn all_table1_workloads_verify_clean() {
+    let cfg = ArchConfig::j3dai();
+    for g in paper_workloads() {
+        let progs = compile_programs(&g, &cfg);
+        let rep = verify(&progs, &cfg);
+        assert!(rep.is_clean(), "{}:\n{}", g.name, rep.render_text());
+    }
+}
+
+#[test]
+fn ablation_configs_verify_clean() {
+    let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+    for cfg in [
+        ArchConfig::j3dai(),
+        ArchConfig { aiu_enabled: false, ..ArchConfig::j3dai() },
+        ArchConfig { dmpa_enabled: false, ..ArchConfig::j3dai() },
+        ArchConfig::scaled(2, 8, 8),
+    ] {
+        let progs = compile_programs(&g, &cfg);
+        let rep = verify(&progs, &cfg);
+        assert!(rep.is_clean(), "aiu={} dmpa={}:\n{}", cfg.aiu_enabled, cfg.dmpa_enabled, rep.render_text());
+    }
+}
+
+/// Find a resident local-SRAM load (window strictly inside the cluster
+/// SRAM) — the kind of buffer the hazard pass tracks.
+fn find_resident_load(progs: &[Program], cap: u64) -> Option<(usize, usize)> {
+    for (ci, p) in progs.iter().enumerate() {
+        for (pc, i) in p.instrs.iter().enumerate() {
+            if let Instr::DmpaLoad { dst_addr, bytes, .. } | Instr::DmaLoad { dst_addr, bytes, .. } = i {
+                if *bytes > 0 && (*dst_addr as u64 + *bytes as u64) < cap {
+                    return Some((ci, pc));
+                }
+            }
+        }
+    }
+    None
+}
+
+#[test]
+fn bounds_mutation_is_caught_on_every_workload() {
+    let cfg = ArchConfig::j3dai();
+    for g in paper_workloads() {
+        let mut progs = compile_programs(&g, &cfg);
+        // corrupt the first load's local destination to far outside SRAM
+        let pos = progs.iter().position(|p| {
+            p.instrs.iter().any(|i| matches!(i, Instr::DmpaLoad { .. } | Instr::DmaLoad { .. }))
+        });
+        let ci = pos.expect("no loads emitted");
+        let pc = progs[ci]
+            .instrs
+            .iter()
+            .position(|i| matches!(i, Instr::DmpaLoad { .. } | Instr::DmaLoad { .. }))
+            .unwrap();
+        match &mut progs[ci].instrs[pc] {
+            Instr::DmpaLoad { dst_addr, .. } | Instr::DmaLoad { dst_addr, .. } => *dst_addr = u32::MAX,
+            _ => unreachable!(),
+        }
+        let rep = verify(&progs, &cfg);
+        assert!(!rep.is_clean(), "{}", g.name);
+        assert!(rep.diagnostics.iter().any(|d| d.code == "bounds.local-oob"), "{}:\n{}", g.name, rep.render_text());
+    }
+}
+
+#[test]
+fn hazard_mutation_is_caught_on_every_workload() {
+    let cfg = ArchConfig::j3dai();
+    let cap = cfg.cluster_local_bytes() as u64;
+    for g in paper_workloads() {
+        let mut progs = compile_programs(&g, &cfg);
+        // duplicate a resident load back-to-back: the second rewrite lands
+        // before anything consumed the first -> clobber
+        let (ci, pc) = find_resident_load(&progs, cap).expect("no resident load");
+        let dup = progs[ci].instrs[pc].clone();
+        progs[ci].instrs.insert(pc + 1, dup);
+        let rep = verify(&progs, &cfg);
+        assert!(!rep.is_clean(), "{}", g.name);
+        assert!(rep.diagnostics.iter().any(|d| d.code == "hazard.clobber"), "{}:\n{}", g.name, rep.render_text());
+    }
+}
+
+#[test]
+fn protocol_mutation_is_caught_on_every_workload() {
+    let cfg = ArchConfig::j3dai();
+    for g in paper_workloads() {
+        let mut progs = compile_programs(&g, &cfg);
+        // drop the `last` flag from a chain-closing ConvTile: the chain
+        // never requants -> dangling or broken chain
+        let mut mutated = false;
+        'outer: for p in progs.iter_mut() {
+            for i in p.instrs.iter_mut() {
+                if let Instr::ConvTile { last, .. } = i {
+                    if *last {
+                        *last = false;
+                        mutated = true;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        assert!(mutated, "no closing ConvTile in {}", g.name);
+        let rep = verify(&progs, &cfg);
+        assert!(!rep.is_clean(), "{}", g.name);
+        assert!(
+            rep.diagnostics
+                .iter()
+                .any(|d| d.code == "protocol.chain-dangling" || d.code == "protocol.chain-broken"),
+            "{}:\n{}",
+            g.name,
+            rep.render_text()
+        );
+    }
+}
+
+#[test]
+fn structure_mutation_is_caught_on_every_workload() {
+    let cfg = ArchConfig::j3dai();
+    for g in paper_workloads() {
+        // missing halt
+        let mut progs = compile_programs(&g, &cfg);
+        assert_eq!(progs[0].instrs.pop(), Some(Instr::Halt));
+        let rep = verify(&progs, &cfg);
+        assert!(rep.diagnostics.iter().any(|d| d.code == "structure.missing-halt"), "{}", g.name);
+
+        // unreachable code after halt
+        let mut progs = compile_programs(&g, &cfg);
+        progs[0].instrs.push(Instr::Sync);
+        let rep = verify(&progs, &cfg);
+        assert!(rep.diagnostics.iter().any(|d| d.code == "structure.unreachable"), "{}", g.name);
+    }
+}
+
+#[test]
+fn sarif_export_of_real_workload_parses() {
+    let cfg = ArchConfig::j3dai();
+    let mut reports = Vec::new();
+    for g in paper_workloads() {
+        let progs = compile_programs(&g, &cfg);
+        // flag TSV crossings so the SARIF has results even on clean models
+        let rep = verify_programs(&progs, &cfg, &VerifyPolicy { flag_tsv: true, ..VerifyPolicy::default() });
+        assert!(rep.is_clean(), "{}", g.name);
+        reports.push((g.name.clone(), rep));
+    }
+    let doc = Json::parse(&sarif::to_sarif(&reports)).unwrap();
+    assert_eq!(doc.get("version").unwrap().as_str(), Some("2.1.0"));
+    let runs = doc.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 3);
+    for run in runs {
+        let name = run
+            .get("tool")
+            .unwrap()
+            .get("driver")
+            .unwrap()
+            .get("name")
+            .unwrap()
+            .as_str()
+            .unwrap();
+        assert_eq!(name, "j3dai-verify");
+    }
+    // the plain-JSON summary parses too and counts agree with the reports
+    let doc = Json::parse(&sarif::to_json(&reports)).unwrap();
+    let entries = doc.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(entries.len(), 3);
+    for (entry, (_, rep)) in entries.iter().zip(&reports) {
+        assert_eq!(entry.get("notes").unwrap().as_f64().unwrap() as usize, rep.note_count());
+    }
+}
