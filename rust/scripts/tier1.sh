@@ -15,6 +15,17 @@ cargo test -q
 echo "== cargo test -q --test ppa_regression"
 cargo test -q --test ppa_regression
 
+# Parallelism correctness: cluster-parallel simulation bit-identical to
+# serial, multi-worker frame pipeline reassembles in order. Run by name so
+# a filtered configuration cannot silently skip the determinism gate.
+echo "== cargo test -q --test perf_parallel"
+cargo test -q --test perf_parallel
+
+# Fast int8 kernels proven element-for-element against the naive reference
+# implementations (registry models + randomized odd shapes/strides).
+echo "== cargo test -q --lib sim::functional"
+cargo test -q --lib sim::functional
+
 # Static program verifier over every Table I workload: any error-severity
 # diagnostic in the compiled cluster programs fails the tier.
 echo "== cargo run --release -- lint --model all"

@@ -4,25 +4,30 @@
 //! Pipeline (std threads + channels; the offline registry has no tokio):
 //!
 //! ```text
-//! [sensor thread] --frames--> [inference worker] --records--> [caller]
-//!      |  FPS governor             | PJRT infer (functional output)
-//!      |  (30 / 200 FPS)           | cycle-sim stats (latency/energy)
+//! [sensor thread] --frames--> [worker 0..M-1] --(seq, result)--> [collector]
+//!      |  FPS governor            | PJRT infer (functional output)
+//!      |  (30 / 200 FPS)          | cycle-sim stats (latency/energy)
 //! ```
 //!
-//! The worker executes the *AOT JAX artifact* through PJRT — python never
-//! runs here — while accounting latency/energy with the cycle simulator's
-//! per-inference numbers, exactly how the real chip would pair its DNN
-//! accelerator with its host runtime.
+//! M inference workers (`CoordinatorConfig::workers`) drain the bounded
+//! frame channel; frames carry sequence numbers, and a collector reorders
+//! worker results so records, metrics and time-series snapshots are
+//! emitted in frame order — the published artifacts are identical for any
+//! worker count. The workers execute the *AOT JAX artifact* through PJRT —
+//! python never runs here — while accounting latency/energy with the cycle
+//! simulator's per-inference numbers, exactly how the real chip would pair
+//! its DNN accelerator with its host runtime.
 //!
 //! The loop is instrumented end to end: every frame produces `capture` and
-//! `infer` wall-time spans (pid [`FRAME_PID`]), and the service publishes
-//! frame-loop metrics (`j3dai_frames_total`, `j3dai_inference_service_us`,
-//! `j3dai_capture_us`, `j3dai_queue_depth`, `j3dai_achieved_fps`) plus the
-//! energy series (`j3dai_energy_mj_total` and friends — see
-//! [`telemetry::energy`]), their per-cluster splits and the PMU stall
-//! counters (`j3dai_stall_cycles_total{cluster,reason}`) into the
-//! coordinator's [`Telemetry`] registry — [`RunStats`] is derived from
-//! those series, not from a private tally. Each processed frame also
+//! `infer` wall-time spans (pid [`FRAME_PID`]; worker threads are named
+//! `infer-0..M-1`), and the service publishes frame-loop metrics
+//! (`j3dai_frames_total`, `j3dai_worker_frames_total{worker}`,
+//! `j3dai_inference_service_us`, `j3dai_capture_us`, `j3dai_queue_depth`,
+//! `j3dai_achieved_fps`) plus the energy series (`j3dai_energy_mj_total`
+//! and friends — see [`telemetry::energy`]), their per-cluster splits and
+//! the PMU stall counters (`j3dai_stall_cycles_total{cluster,reason}`)
+//! into the coordinator's [`Telemetry`] registry — [`RunStats`] is derived
+//! from those series, not from a private tally. Each processed frame also
 //! pushes a snapshot (queue depth, fps, power, cumulative energy) into the
 //! ring sampler behind `/timeseries.json`, and the service histogram
 //! carries an exemplar naming the slowest frame. The registry/trace pair
@@ -30,9 +35,10 @@
 //! --metrics-addr`, [`crate::telemetry::MetricsServer`]) can scrape it
 //! while frames flow.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::ArchConfig;
@@ -43,8 +49,8 @@ use crate::sensor::PixelArray;
 use crate::sim::functional::Tensor;
 use crate::sim::{self, SimResult};
 use crate::telemetry::{
-    self, ArgValue, ClusterEnergyMetrics, EnergyMetrics, RingSampler, StallMetrics, Telemetry,
-    TraceEvent, FRAME_PID, SERVICE_US_BUCKETS,
+    self, ArgValue, ClusterEnergyMetrics, Counter, EnergyMetrics, RingSampler, StallMetrics,
+    Telemetry, TraceEvent, FRAME_PID, SERVICE_US_BUCKETS,
 };
 
 /// One processed frame.
@@ -80,12 +86,25 @@ pub struct RunStats {
 pub struct CoordinatorConfig {
     pub target_fps: f64,
     pub frames: u64,
+    /// Inference workers draining the frame channel (clamped to >= 1).
+    /// Frames are sequence-numbered and reassembled in order, so records
+    /// and published metrics are identical for any worker count.
+    pub workers: usize,
+    /// Host threads for the cluster-parallel pre-simulation
+    /// (see [`sim::simulate_threads`]).
+    pub sim_threads: usize,
     pub arch: ArchConfig,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { target_fps: 30.0, frames: 30, arch: ArchConfig::j3dai() }
+        CoordinatorConfig {
+            target_fps: 30.0,
+            frames: 30,
+            workers: 1,
+            sim_threads: 1,
+            arch: ArchConfig::j3dai(),
+        }
     }
 }
 
@@ -128,7 +147,7 @@ impl Coordinator {
     pub fn presimulate(&self, name: &str) -> crate::Result<SimResult> {
         let g = crate::models::artifact_graph(name)
             .ok_or_else(|| anyhow::anyhow!("no graph twin for artifact {name}"))?;
-        sim::simulate(&g, &self.cfg.arch)
+        sim::simulate_threads(&g, &self.cfg.arch, self.cfg.sim_threads)
     }
 
     /// Run the frame loop for one model; returns aggregated stats.
@@ -160,7 +179,7 @@ pub fn run_functional_loop(
     ccfg: &CoordinatorConfig,
     tel: &Telemetry,
 ) -> crate::Result<RunStats> {
-    let simr = sim::simulate(g, &ccfg.arch)?;
+    let simr = sim::simulate_threads(g, &ccfg.arch, ccfg.sim_threads)?;
     let energy = EnergyModel::fdsoi28();
     run_frame_loop(&g.name, g.input, ccfg, tel, &simr, &energy, |frame| {
         let out = sim::functional::run_final(g, frame);
@@ -168,10 +187,21 @@ pub fn run_functional_loop(
     })
 }
 
-/// The shared frame loop: paced sensor thread, bounded channel, per-frame
-/// spans and metrics, aggregation. `infer` classifies one frame (its wall
-/// time is the service-time metric); `simr`/`em` supply the modeled
-/// latency/energy figures each processed frame accounts into the registry.
+/// One worker's per-frame output, posted to the collector with its frame
+/// sequence number for in-order reassembly.
+struct WorkerDone {
+    top_class: usize,
+    service_us: f64,
+    /// Channel depth observed as the worker dequeued this frame.
+    queue_depth: u64,
+}
+
+/// The shared frame loop: paced sensor thread, bounded channel, M
+/// inference workers, in-order reassembly, per-frame spans and metrics,
+/// aggregation. `infer` classifies one frame (its wall time is the
+/// service-time metric) and may be called from any worker thread;
+/// `simr`/`em` supply the modeled latency/energy figures each processed
+/// frame accounts into the registry.
 fn run_frame_loop(
     model: &str,
     shape: Shape,
@@ -179,8 +209,9 @@ fn run_frame_loop(
     tel: &Telemetry,
     simr: &SimResult,
     em: &EnergyModel,
-    mut infer: impl FnMut(&Tensor) -> crate::Result<usize>,
+    infer: impl Fn(&Tensor) -> crate::Result<usize> + Sync,
 ) -> crate::Result<RunStats> {
+    let workers = ccfg.workers.max(1);
     let modeled_latency_ms = simr.latency_ms;
     let modeled_energy_mj = em.inference_mj(&simr.activity);
     // energy gauges report the rate the loop is paced at, capped at what the
@@ -212,6 +243,17 @@ fn run_frame_loop(
         tel.registry.gauge_with("j3dai_queue_depth", labels, "Frames waiting in the channel");
     let fps_gauge =
         tel.registry.gauge_with("j3dai_achieved_fps", labels, "Achieved frame rate of last run");
+    // per-worker share of the processed frames (load-balance visibility)
+    let worker_frames: Vec<Counter> = (0..workers)
+        .map(|wi| {
+            let w = format!("{wi}");
+            tel.registry.counter_with(
+                "j3dai_worker_frames_total",
+                &[("model", model), ("worker", w.as_str())],
+                "Frames processed per inference worker",
+            )
+        })
+        .collect();
     // snapshots: RunStats is derived from the registry deltas of this run,
     // so several runs can share one Telemetry domain
     let (count0, sum0, n0) = (frames_total.get(), service_hist.sum(), service_hist.count());
@@ -221,96 +263,151 @@ fn run_frame_loop(
     tel.install_sampler(RingSampler::new(0.0, 1024, series.map(String::from).into()));
     tel.name_process(FRAME_PID, "frame-loop");
     tel.name_thread(FRAME_PID, 0, "capture");
-    tel.name_thread(FRAME_PID, 1, "infer");
+    for wi in 0..workers {
+        tel.name_thread(FRAME_PID, 1 + wi as u32, &format!("infer-{wi}"));
+    }
 
-    // sensor thread: paced frame production with backpressure (bounded
-    // channel of 2 frames — the double-buffered L2 frame slots). Capture
-    // timestamps ride the channel so the consumer can record their spans
-    // on the shared telemetry timebase.
+    // channels: the bounded frame channel (capacity 2 — the double-buffered
+    // L2 frame slots) feeds the workers; the result channel carries
+    // sequence-numbered outputs back to the collector. Capture timestamps
+    // ride the frame channel so workers can record their spans on the
+    // shared telemetry timebase.
     let (tx, rx) = mpsc::sync_channel::<(u64, Tensor, f64, f64)>(2);
+    let frame_rx = Mutex::new(rx);
+    let (res_tx, res_rx) = mpsc::channel::<(u64, crate::Result<WorkerDone>)>();
     let frames = ccfg.frames;
     let period = Duration::from_secs_f64(1.0 / ccfg.target_fps);
-    let depth = Arc::new(AtomicU64::new(0));
-    let depth_producer = Arc::clone(&depth);
+    let depth = AtomicU64::new(0);
     let base = Instant::now();
     let base_us = tel.now_us();
-    let producer = std::thread::spawn(move || {
-        let pixels = PixelArray::new(0x13DA1);
-        let t0 = Instant::now();
-        for i in 0..frames {
-            let due = period * i as u32;
-            if let Some(sleep) = due.checked_sub(t0.elapsed()) {
-                std::thread::sleep(sleep);
-            }
-            let cap_ts = base_us + base.elapsed().as_secs_f64() * 1e6;
-            let frame = pixels.capture(i, shape);
-            let cap_dur = base_us + base.elapsed().as_secs_f64() * 1e6 - cap_ts;
-            depth_producer.fetch_add(1, Ordering::Relaxed);
-            if tx.send((i, frame, cap_ts, cap_dur)).is_err() {
-                break; // consumer gone
-            }
-        }
-    });
 
     let mut records = Vec::with_capacity(frames as usize);
     let mut loop_err = None;
     let t0 = Instant::now();
-    while let Ok((i, frame, cap_ts, cap_dur)) = rx.recv() {
-        let queue_depth = depth.fetch_sub(1, Ordering::Relaxed).saturating_sub(1) as f64;
-        depth_gauge.set(queue_depth);
-        capture_hist.observe(cap_dur);
-        tel.record(TraceEvent {
-            name: "capture".to_string(),
-            cat: model.to_string(),
-            pid: FRAME_PID,
-            tid: 0,
-            ts_us: cap_ts,
-            dur_us: cap_dur,
-            args: vec![("frame".to_string(), ArgValue::U64(i))],
-        });
-        let s0 = tel.now_us();
-        let top_class = match infer(&frame) {
-            Ok(c) => c,
-            Err(e) => {
-                loop_err = Some(e);
-                break;
+    std::thread::scope(|s| {
+        // sensor thread: paced frame production with backpressure
+        let depth_ref = &depth;
+        s.spawn(move || {
+            let pixels = PixelArray::new(0x13DA1);
+            let p0 = Instant::now();
+            for i in 0..frames {
+                let due = period * i as u32;
+                if let Some(sleep) = due.checked_sub(p0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+                let cap_ts = base_us + base.elapsed().as_secs_f64() * 1e6;
+                let frame = pixels.capture(i, shape);
+                let cap_dur = base_us + base.elapsed().as_secs_f64() * 1e6 - cap_ts;
+                depth_ref.fetch_add(1, Ordering::Relaxed);
+                if tx.send((i, frame, cap_ts, cap_dur)).is_err() {
+                    break; // all workers gone
+                }
             }
-        };
-        let service_us = tel.now_us() - s0;
-        tel.record(TraceEvent {
-            name: "infer".to_string(),
-            cat: model.to_string(),
-            pid: FRAME_PID,
-            tid: 1,
-            ts_us: s0,
-            dur_us: service_us,
-            args: vec![
-                ("frame".to_string(), ArgValue::U64(i)),
-                ("top_class".to_string(), ArgValue::U64(top_class as u64)),
-            ],
         });
-        // the exemplar pins the worst frame's id onto the hot bucket, so a
-        // scrape can jump straight from the histogram to the trace span
-        service_hist.observe_with_exemplar(service_us, &format!("frame{i}"));
-        frames_total.inc();
-        energy_metrics.record_inference(em, &simr.activity, modeled_fps);
-        cluster_energy.record_inference(em, &cluster_acts);
-        stall_metrics.record(simr.clusters.iter().map(|c| &c.pmu));
-        let fps_now = (records.len() + 1) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
-        tel.sample(
-            tel.now_us(),
-            vec![queue_depth, fps_now, modeled_power_mw, energy_metrics.total_mj()],
-        );
-        records.push(FrameRecord {
-            frame_idx: i,
-            top_class,
-            service_us,
-            modeled_latency_ms,
-            modeled_energy_mj,
-        });
-    }
-    drop(rx); // unblock a producer parked on the bounded channel
-    producer.join().map_err(|_| anyhow::anyhow!("sensor thread panicked"))?;
+
+        // M inference workers share the frame channel behind a mutex (the
+        // guard drops at the end of the `recv` statement, before inference
+        // runs) and post sequence-numbered results; errors are forwarded
+        // to the collector
+        let frame_rx = &frame_rx;
+        let infer = &infer;
+        let capture_hist = &capture_hist;
+        let service_hist = &service_hist;
+        let worker_frames = &worker_frames;
+        for wi in 0..workers {
+            let res_tx = res_tx.clone();
+            s.spawn(move || loop {
+                let msg = frame_rx.lock().unwrap().recv();
+                let Ok((i, frame, cap_ts, cap_dur)) = msg else { break };
+                let queue_depth = depth_ref.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+                capture_hist.observe(cap_dur);
+                tel.record(TraceEvent {
+                    name: "capture".to_string(),
+                    cat: model.to_string(),
+                    pid: FRAME_PID,
+                    tid: 0,
+                    ts_us: cap_ts,
+                    dur_us: cap_dur,
+                    args: vec![("frame".to_string(), ArgValue::U64(i))],
+                });
+                let s0 = tel.now_us();
+                let res = infer(&frame).map(|top_class| {
+                    let service_us = tel.now_us() - s0;
+                    tel.record(TraceEvent {
+                        name: "infer".to_string(),
+                        cat: model.to_string(),
+                        pid: FRAME_PID,
+                        tid: 1 + wi as u32,
+                        ts_us: s0,
+                        dur_us: service_us,
+                        args: vec![
+                            ("frame".to_string(), ArgValue::U64(i)),
+                            ("top_class".to_string(), ArgValue::U64(top_class as u64)),
+                            ("worker".to_string(), ArgValue::U64(wi as u64)),
+                        ],
+                    });
+                    // the exemplar pins the worst frame's id onto the hot
+                    // bucket, so a scrape can jump straight from the
+                    // histogram to the trace span
+                    service_hist.observe_with_exemplar(service_us, &format!("frame{i}"));
+                    worker_frames[wi].inc();
+                    WorkerDone { top_class, service_us, queue_depth }
+                });
+                let failed = res.is_err();
+                if res_tx.send((i, res)).is_err() || failed {
+                    break;
+                }
+            });
+        }
+        drop(res_tx);
+
+        // collector: reassemble results in frame order — all registry,
+        // sampler and record bookkeeping happens here, on one thread, so
+        // downstream consumers observe the same sequences as with 1 worker
+        let mut pending: BTreeMap<u64, WorkerDone> = BTreeMap::new();
+        let mut next_seq = 0u64;
+        while let Ok((i, res)) = res_rx.recv() {
+            match res {
+                Err(e) => {
+                    loop_err = Some(e);
+                    break;
+                }
+                Ok(done) => {
+                    pending.insert(i, done);
+                }
+            }
+            while let Some(done) = pending.remove(&next_seq) {
+                depth_gauge.set(done.queue_depth as f64);
+                frames_total.inc();
+                energy_metrics.record_inference(em, &simr.activity, modeled_fps);
+                cluster_energy.record_inference(em, &cluster_acts);
+                stall_metrics.record(simr.clusters.iter().map(|c| &c.pmu));
+                let fps_now = (records.len() + 1) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+                tel.sample(
+                    tel.now_us(),
+                    vec![
+                        done.queue_depth as f64,
+                        fps_now,
+                        modeled_power_mw,
+                        energy_metrics.total_mj(),
+                    ],
+                );
+                records.push(FrameRecord {
+                    frame_idx: next_seq,
+                    top_class: done.top_class,
+                    service_us: done.service_us,
+                    modeled_latency_ms,
+                    modeled_energy_mj,
+                });
+                next_seq += 1;
+            }
+        }
+        if loop_err.is_some() {
+            // a worker died mid-run: drain the frame channel so a producer
+            // parked on the bounded send can finish and the scope can join
+            while frame_rx.lock().unwrap().recv().is_ok() {}
+        }
+    });
     if let Some(e) = loop_err {
         return Err(e);
     }

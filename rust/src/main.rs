@@ -1,20 +1,25 @@
 //! j3dai CLI — the leader entrypoint.
 //!
 //! ```text
-//! j3dai serve  [--model NAME] [--fps N] [--frames N] [--trace-out F]
-//!              [--metrics-addr HOST:PORT]             run the frame loop (+ live /metrics)
-//! j3dai sim    [--model mbv1|mbv2|seg|all] [--trace-out F] [--profile-out F]
+//! j3dai serve  [--model NAME] [--fps N] [--frames N] [--workers M] [--threads N]
+//!              [--trace-out F] [--metrics-addr HOST:PORT]  run the frame loop (+ live /metrics)
+//! j3dai sim    [--model mbv1|mbv2|seg|all] [--threads N] [--trace-out F] [--profile-out F]
 //!                                                      cycle-simulate Table I workloads
 //!                                                      (+ per-cluster/per-layer stall attribution)
-//! j3dai trace  [--model NAME] [--out trace.json] [--profile-out F]
+//! j3dai trace  [--model NAME] [--threads N] [--out trace.json] [--profile-out F]
 //!                                                      traced sim -> Perfetto trace + layer table
 //! j3dai sample [--model NAME] [--interval N] [--out F] cycle-binned time series -> JSON
 //! j3dai roofline [--model NAME] [--svg-out F]          per-layer roofline (GOPS vs MACs/byte)
-//! j3dai metrics [--model NAME] [--frames N] [--exemplars]  functional loop -> Prometheus text
+//! j3dai metrics [--model NAME] [--frames N] [--workers M] [--exemplars]
+//!                                                      functional loop -> Prometheus text
 //! j3dai bench-telemetry [--out BENCH_telemetry.json]   tracing-overhead benchmark file
 //! j3dai bench-ppa [--out BENCH_ppa.json]               PPA regression file (energy/latency/TOPS/W)
+//! j3dai bench-throughput [--threads N] [--workers M] [--iters K] [--frames N]
+//!              [--out BENCH_throughput.json] [--min-speedup X]
+//!                                                      parallel-sim + frame-pipeline throughput
 //! j3dai bench-compare OLD.json NEW.json [--latency-tol PCT] [--power-tol PCT] [--topsw-tol PCT]
-//!                                                      PPA trajectory diff, exit 1 on regression
+//!              [--speedup-tol PCT] [--fps-tol PCT]     PPA or throughput trajectory diff,
+//!                                                      exit 1 on regression
 //! j3dai table1 | table2 | fig5 | fig6                  print a paper table/figure
 //! j3dai compile [--model ...]                          show mapping/schedule report
 //! j3dai lint   [--model mbv1|mbv2|seg|all] [--json] [--sarif-out F] [--flag-tsv]
@@ -80,6 +85,17 @@ fn paper_graph(key: &str) -> Option<j3dai::graph::Graph> {
     }
 }
 
+/// Artifact twin used by `bench-throughput` for the end-to-end frame
+/// pipeline: the paper workloads have no recorded golden artifacts, so the
+/// pipeline runs their reduced-resolution registry twins instead.
+fn throughput_twin(key: &str) -> &'static str {
+    match model_key(key) {
+        "mbv1" => "mbv1_w25_48x64",
+        "mbv2" => "mbv2_w25_48x64",
+        _ => "fpnseg_w25_48x64",
+    }
+}
+
 /// Resolve `--model` or fail with the full list of accepted names — the
 /// CLI's unknown-model path must say what *would* have worked.
 fn require_graph(key: &str) -> j3dai::Result<j3dai::graph::Graph> {
@@ -109,10 +125,21 @@ fn run() -> j3dai::Result<()> {
         "serve" => {
             let fps: f64 = flag(&args, "--fps").and_then(|v| v.parse().ok()).unwrap_or(30.0);
             let frames: u64 = flag(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(30);
+            let workers: usize =
+                flag(&args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(1);
+            let threads: usize = flag(&args, "--threads")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(sim::default_threads);
             let model = flag(&args, "--model").unwrap_or_else(|| "tinycnn_24x32".into());
             let coord = Coordinator::new(
                 &runtime::default_artifact_dir(),
-                CoordinatorConfig { target_fps: fps, frames, arch: cfg },
+                CoordinatorConfig {
+                    target_fps: fps,
+                    frames,
+                    workers,
+                    sim_threads: threads,
+                    arch: cfg,
+                },
             )?;
             // the exporter shares the coordinator's registry/trace, so
             // /metrics and /trace.json are live while frames flow
@@ -159,12 +186,15 @@ fn run() -> j3dai::Result<()> {
             };
             let trace_out = flag(&args, "--trace-out");
             let profile_out = flag(&args, "--profile-out");
+            let threads: usize = flag(&args, "--threads")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(sim::default_threads);
             let mut merged = j3dai::telemetry::TraceBuilder::new();
             let mut folded = j3dai::telemetry::FoldedProfile::new();
             for (mi, &key) in keys.iter().enumerate() {
                 let g = require_graph(key)?;
                 let r = if trace_out.is_some() || profile_out.is_some() {
-                    let (r, mut tr) = sim::simulate_traced(&g, &cfg)?;
+                    let (r, mut tr) = sim::simulate_traced_threads(&g, &cfg, threads)?;
                     if keys.len() > 1 {
                         // namespace per-model stacks in a multi-model profile
                         folded.merge_prefixed(key, &tr.folded);
@@ -178,7 +208,7 @@ fn run() -> j3dai::Result<()> {
                     merged.merge(tr.trace);
                     r
                 } else {
-                    sim::simulate(&g, &cfg)?
+                    sim::simulate_threads(&g, &cfg, threads)?
                 };
                 println!(
                     "{:<14} {:>6.0} MMACs  {:>8} cycles  {:.2} ms  eff {:.1}%  P@30 {}",
@@ -214,10 +244,13 @@ fn run() -> j3dai::Result<()> {
         "trace" => {
             let key = flag(&args, "--model").unwrap_or_else(|| "mbv1".into());
             let out = flag(&args, "--out").unwrap_or_else(|| "trace.json".into());
+            let threads: usize = flag(&args, "--threads")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(sim::default_threads);
             let g = require_graph(&key)?;
             let tel = Telemetry::new(true);
             let c = compiler::compile_traced(&g, &cfg, Some(&tel))?;
-            let (r, mut tr) = sim::simulate_compiled_traced(&g, &cfg, &c);
+            let (r, mut tr) = sim::simulate_compiled_traced_threads(&g, &cfg, &c, threads);
             tr.trace.merge(tel.take_trace()); // compiler-pass wall spans
             std::fs::write(&out, tr.trace.to_chrome_json())
                 .with_context(|| format!("cannot write trace to {out}"))?;
@@ -272,9 +305,17 @@ fn run() -> j3dai::Result<()> {
             let key = flag(&args, "--model").unwrap_or_else(|| "tinycnn_24x32".into());
             let frames: u64 = flag(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(30);
             let fps: f64 = flag(&args, "--fps").and_then(|v| v.parse().ok()).unwrap_or(1000.0);
+            let workers: usize =
+                flag(&args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(1);
             let g = require_graph(&key)?;
             let tel = Telemetry::new(false); // metrics only; no span buffer
-            let ccfg = CoordinatorConfig { target_fps: fps, frames, arch: cfg };
+            let ccfg = CoordinatorConfig {
+                target_fps: fps,
+                frames,
+                workers,
+                arch: cfg,
+                ..Default::default()
+            };
             let stats = coordinator::run_functional_loop(&g, &ccfg, &tel)?;
             if has_flag(&args, "--exemplars") {
                 print!("{}", tel.registry.render_with_exemplars(true));
@@ -371,13 +412,102 @@ fn run() -> j3dai::Result<()> {
                 .with_context(|| format!("cannot write {out}"))?;
             println!("wrote {out}");
         }
+        "bench-throughput" => {
+            if has_flag(&args, "--help") {
+                println!(
+                    "j3dai bench-throughput [--threads N] [--workers M] [--iters K] \
+                     [--frames N] [--out BENCH_throughput.json] [--min-speedup X]"
+                );
+                println!();
+                println!("Benchmark the host-side parallelism: per Table I workload, time the");
+                println!("cycle simulation at 1 thread and at --threads (min over --iters");
+                println!("runs), and run the multi-worker functional frame pipeline on the");
+                println!("model's artifact twin to measure end-to-end frames/s. Writes a");
+                println!("machine-readable JSON file for bench-compare; --min-speedup fails");
+                println!("the run unless the seg workload's sim speedup reaches the floor.");
+                return Ok(());
+            }
+            let out = flag(&args, "--out").unwrap_or_else(|| "BENCH_throughput.json".into());
+            let threads: usize = flag(&args, "--threads")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(sim::default_threads);
+            let iters: usize = flag(&args, "--iters").and_then(|v| v.parse().ok()).unwrap_or(3);
+            let frames: u64 = flag(&args, "--frames").and_then(|v| v.parse().ok()).unwrap_or(24);
+            let workers: usize =
+                flag(&args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(threads);
+            let min_speedup: Option<f64> =
+                flag(&args, "--min-speedup").and_then(|v| v.parse().ok());
+            let mut entries = Vec::new();
+            for key in ["mbv1", "mbv2", "seg"] {
+                let g = require_graph(key)?;
+                let c = compiler::compile(&g, &cfg)?;
+                let wall_ms = |f: &dyn Fn()| {
+                    let t0 = std::time::Instant::now();
+                    f();
+                    t0.elapsed().as_secs_f64() * 1e3
+                };
+                let min_of = |n: usize| {
+                    (0..iters)
+                        .map(|_| wall_ms(&|| drop(sim::simulate_compiled_threads(&g, &cfg, &c, n))))
+                        .fold(f64::MAX, f64::min)
+                };
+                let serial = min_of(1);
+                let parallel = min_of(threads);
+                let speedup = serial / parallel.max(1e-9);
+                let twin = throughput_twin(key);
+                let tg = require_graph(twin)?;
+                let ccfg = CoordinatorConfig {
+                    target_fps: 1e9, // unpaced: measure pipeline throughput
+                    frames,
+                    workers,
+                    sim_threads: threads,
+                    arch: cfg.clone(),
+                };
+                let stats = coordinator::run_functional_loop(&tg, &ccfg, &Telemetry::disabled())?;
+                println!(
+                    "{:<14} sim 1t {serial:>8.1} ms  {threads}t {parallel:>8.1} ms  \
+                     speedup {speedup:.2}x | pipeline {twin}: {:.1} frames/s ({workers} workers)",
+                    g.name, stats.achieved_fps
+                );
+                entries.push(report::ThroughputEntry {
+                    model: g.name.clone(),
+                    twin: twin.to_string(),
+                    sim_wall_ms_1t: serial,
+                    sim_wall_ms_nt: parallel,
+                    speedup,
+                    frames_per_s: stats.achieved_fps,
+                    frames,
+                });
+            }
+            std::fs::write(&out, report::bench_throughput_json(threads, workers, iters, &entries))
+                .with_context(|| format!("cannot write {out}"))?;
+            println!("wrote {out}");
+            if let Some(floor) = min_speedup {
+                for e in entries.iter().filter(|e| e.model.starts_with("fpnseg")) {
+                    anyhow::ensure!(
+                        e.speedup >= floor,
+                        "{}: sim speedup {:.2}x at {threads} threads is below the \
+                         --min-speedup floor {floor:.2}x",
+                        e.model,
+                        e.speedup
+                    );
+                }
+            }
+        }
         "bench-compare" => {
-            let tols = ["--latency-tol", "--power-tol", "--topsw-tol"];
+            let tols = [
+                "--latency-tol",
+                "--power-tol",
+                "--topsw-tol",
+                "--speedup-tol",
+                "--fps-tol",
+            ];
             let files = positionals(&args, &tols);
             if has_flag(&args, "--help") || files.len() < 2 {
                 println!(
                     "j3dai bench-compare OLD.json NEW.json [MORE.json ...] \
-                     [--latency-tol PCT] [--power-tol PCT] [--topsw-tol PCT]"
+                     [--latency-tol PCT] [--power-tol PCT] [--topsw-tol PCT] \
+                     [--speedup-tol PCT] [--fps-tol PCT]"
                 );
                 println!();
                 println!("Diff two or more bench-ppa output files (oldest first) and print");
@@ -385,35 +515,63 @@ fn run() -> j3dai::Result<()> {
                 println!("across runs, with the first-vs-last delta. Exits non-zero if any");
                 println!("metric regressed past its tolerance (defaults: latency 5%, power");
                 println!("10%, TOPS/W 10%) — wire it into CI against a committed baseline.");
+                println!();
+                println!("bench-throughput files are detected automatically (\"bench\":");
+                println!("\"throughput\") and gated on sim speedup and pipeline frames/s");
+                println!("instead (defaults: speedup 25%, fps 60%; raw wall-times are");
+                println!("reported but never gated — they don't transfer across machines).");
                 if files.len() < 2 && !has_flag(&args, "--help") {
-                    anyhow::bail!("bench-compare needs at least two bench-ppa files");
+                    anyhow::bail!("bench-compare needs at least two bench files");
                 }
                 return Ok(());
             }
-            let mut thr = report::compare::CompareThresholds::default();
-            if let Some(v) = flag(&args, "--latency-tol").and_then(|v| v.parse().ok()) {
-                thr.latency_pct = v;
-            }
-            if let Some(v) = flag(&args, "--power-tol").and_then(|v| v.parse().ok()) {
-                thr.power_pct = v;
-            }
-            if let Some(v) = flag(&args, "--topsw-tol").and_then(|v| v.parse().ok()) {
-                thr.tops_w_pct = v;
-            }
-            let mut parsed = Vec::new();
+            let mut texts = Vec::new();
             for path in &files {
                 let text = std::fs::read_to_string(path)
                     .with_context(|| format!("cannot read {path}"))?;
-                parsed.push(report::compare::parse_bench_ppa(path, &text)?);
+                texts.push(text);
             }
-            let cmp = report::compare::compare(&parsed, &thr)?;
+            let is_throughput = j3dai::telemetry::json::Json::parse(&texts[0])
+                .ok()
+                .map(|d| d.get("bench").and_then(|b| b.as_str()) == Some("throughput"))
+                .unwrap_or(false);
+            let cmp = if is_throughput {
+                let mut thr = report::compare::ThroughputThresholds::default();
+                if let Some(v) = flag(&args, "--speedup-tol").and_then(|v| v.parse().ok()) {
+                    thr.speedup_pct = v;
+                }
+                if let Some(v) = flag(&args, "--fps-tol").and_then(|v| v.parse().ok()) {
+                    thr.fps_pct = v;
+                }
+                let mut parsed = Vec::new();
+                for (path, text) in files.iter().zip(&texts) {
+                    parsed.push(report::compare::parse_bench_throughput(path, text)?);
+                }
+                report::compare::compare_throughput(&parsed, &thr)?
+            } else {
+                let mut thr = report::compare::CompareThresholds::default();
+                if let Some(v) = flag(&args, "--latency-tol").and_then(|v| v.parse().ok()) {
+                    thr.latency_pct = v;
+                }
+                if let Some(v) = flag(&args, "--power-tol").and_then(|v| v.parse().ok()) {
+                    thr.power_pct = v;
+                }
+                if let Some(v) = flag(&args, "--topsw-tol").and_then(|v| v.parse().ok()) {
+                    thr.tops_w_pct = v;
+                }
+                let mut parsed = Vec::new();
+                for (path, text) in files.iter().zip(&texts) {
+                    parsed.push(report::compare::parse_bench_ppa(path, text)?);
+                }
+                report::compare::compare(&parsed, &thr)?
+            };
             print!("{}", cmp.table);
             for reg in &cmp.regressions {
                 eprintln!("REGRESSION {}: {}", reg.model, reg.detail);
             }
             anyhow::ensure!(
                 cmp.regressions.is_empty(),
-                "{} PPA regression(s) past tolerance",
+                "{} regression(s) past tolerance",
                 cmp.regressions.len()
             );
         }
@@ -555,15 +713,22 @@ fn print_help() {
     println!("j3dai — J3DAI (ISLPED'25) digital-system reproduction");
     println!(
         "commands: serve | sim | trace | sample | roofline | metrics | bench-telemetry | \
-         bench-ppa | bench-compare | table1 | table2 | fig5 | fig6 | compile | lint | list"
+         bench-ppa | bench-throughput | bench-compare | table1 | table2 | fig5 | fig6 | \
+         compile | lint | list"
     );
     println!(
         "  serve --metrics-addr HOST:PORT exposes live /metrics, /trace.json, /timeseries.json"
     );
+    println!("  serve --workers M fans inference out to M workers; --threads N parallelizes");
+    println!("  the cluster simulation (sim/trace take --threads too; default: all cores)");
     println!("  sim/trace --profile-out F write inferno-format folded stacks (flamegraphs)");
     println!("  roofline --svg-out F writes the roofline plot as a standalone SVG");
     println!("  lint runs the static program verifier (bounds/hazard/protocol/structure)");
-    println!("  sample / roofline / bench-ppa / bench-compare / lint --help print per-command usage");
+    println!("  bench-throughput measures parallel-sim speedup + pipeline frames/s");
+    println!(
+        "  sample / roofline / bench-ppa / bench-throughput / bench-compare / lint --help \
+         print per-command usage"
+    );
 }
 
 // (dev helper kept out of the help text: `j3dai tiles` prints per-model

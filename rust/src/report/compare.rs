@@ -202,6 +202,168 @@ pub fn compare(files: &[BenchFile], thr: &CompareThresholds) -> crate::Result<Co
     Ok(Comparison { table, regressions })
 }
 
+/// One model's throughput metrics parsed from a `BENCH_throughput.json`
+/// snapshot (`j3dai bench-throughput`).
+#[derive(Debug, Clone, Default)]
+pub struct ThroughputModel {
+    pub model: String,
+    pub sim_wall_ms_1t: Option<f64>,
+    pub sim_wall_ms_nt: Option<f64>,
+    pub speedup: Option<f64>,
+    pub frames_per_s: Option<f64>,
+}
+
+/// One parsed throughput snapshot: label (file name) plus its models.
+#[derive(Debug, Clone)]
+pub struct ThroughputFile {
+    pub label: String,
+    pub models: Vec<ThroughputModel>,
+}
+
+/// Parse one `BENCH_throughput.json` document. The `"bench": "throughput"`
+/// tag is required — feeding a `BENCH_ppa.json` here is an error, not a
+/// silently empty comparison.
+pub fn parse_bench_throughput(label: &str, text: &str) -> crate::Result<ThroughputFile> {
+    let doc = Json::parse(text)?;
+    anyhow::ensure!(
+        doc.get("bench").and_then(Json::as_str) == Some("throughput"),
+        "{label}: not a bench-throughput file (missing \"bench\": \"throughput\")"
+    );
+    let models = doc
+        .get("models")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("{label}: missing \"models\" array"))?;
+    let num = |m: &Json, k: &str| m.get(k).and_then(Json::as_f64);
+    let parsed = models
+        .iter()
+        .map(|m| {
+            let name = m
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("{label}: model entry without a name"))?;
+            Ok(ThroughputModel {
+                model: name.to_string(),
+                sim_wall_ms_1t: num(m, "sim_wall_ms_1t"),
+                sim_wall_ms_nt: num(m, "sim_wall_ms_nt"),
+                speedup: num(m, "speedup"),
+                frames_per_s: num(m, "frames_per_s"),
+            })
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    Ok(ThroughputFile { label: label.to_string(), models: parsed })
+}
+
+/// Throughput regression tolerances, percent of the baseline value. Only
+/// the two scale-invariant metrics gate: speedup (sim parallel scaling)
+/// and frames/s (pipeline throughput, loose — CI runners are noisy). Raw
+/// wall-times never gate; they don't transfer across machines.
+#[derive(Debug, Clone, Copy)]
+pub struct ThroughputThresholds {
+    pub speedup_pct: f64,
+    pub fps_pct: f64,
+}
+
+impl Default for ThroughputThresholds {
+    fn default() -> Self {
+        ThroughputThresholds { speedup_pct: 25.0, fps_pct: 60.0 }
+    }
+}
+
+/// The throughput metrics: `(name, higher_is_better, gated)`.
+const THROUGHPUT_METRICS: [(&str, bool, bool); 4] = [
+    ("sim_wall_ms_1t", false, false),
+    ("sim_wall_ms_nt", false, false),
+    ("speedup", true, true),
+    ("frames_per_s", true, true),
+];
+
+fn throughput_metric(m: &ThroughputModel, name: &str) -> Option<f64> {
+    match name {
+        "sim_wall_ms_1t" => m.sim_wall_ms_1t,
+        "sim_wall_ms_nt" => m.sim_wall_ms_nt,
+        "speedup" => m.speedup,
+        "frames_per_s" => m.frames_per_s,
+        _ => None,
+    }
+}
+
+fn throughput_tolerance(thr: &ThroughputThresholds, name: &str) -> f64 {
+    match name {
+        "speedup" => thr.speedup_pct,
+        "frames_per_s" => thr.fps_pct,
+        _ => f64::INFINITY,
+    }
+}
+
+/// Compare throughput snapshots: baseline = first file, candidate = last.
+/// Same trajectory-table + gated-regressions contract as [`compare`].
+pub fn compare_throughput(
+    files: &[ThroughputFile],
+    thr: &ThroughputThresholds,
+) -> crate::Result<Comparison> {
+    anyhow::ensure!(files.len() >= 2, "bench-compare needs at least two files");
+    let base = &files[0];
+    let cand = files.last().unwrap();
+
+    let mut table = String::from("Throughput trajectory (baseline = first, candidate = last)\n");
+    table.push_str(&format!("{:<14} {:<14}", "Model", "Metric"));
+    for f in files {
+        table.push_str(&format!(" {:>16}", clip(&f.label, 16)));
+    }
+    table.push_str(&format!(" {:>8}\n", "delta %"));
+
+    let mut regressions = Vec::new();
+    for bm in &base.models {
+        let Some(cm) = cand.models.iter().find(|m| m.model == bm.model) else {
+            let detail = format!("{} missing from {}", bm.model, cand.label);
+            regressions.push(Regression { model: bm.model.clone(), metric: "model", detail });
+            continue;
+        };
+        for (name, higher_better, gated) in THROUGHPUT_METRICS {
+            table.push_str(&format!("{:<14} {:<14}", bm.model, name));
+            for f in files {
+                let v = f
+                    .models
+                    .iter()
+                    .find(|m| m.model == bm.model)
+                    .and_then(|m| throughput_metric(m, name));
+                table.push_str(&format!(" {:>16}", opt_cell(v)));
+            }
+            let (b, c) = (throughput_metric(bm, name), throughput_metric(cm, name));
+            let delta = match (b, c) {
+                (Some(bv), Some(cv)) if bv != 0.0 => Some((cv / bv - 1.0) * 100.0),
+                _ => None,
+            };
+            table.push_str(&format!(" {:>8}\n", delta_cell(delta)));
+            if !gated {
+                continue;
+            }
+            let tol = throughput_tolerance(thr, name);
+            match (b, c) {
+                (Some(bv), Some(cv)) => {
+                    let pct = if bv != 0.0 { (cv / bv - 1.0) * 100.0 } else { 0.0 };
+                    let worse = if higher_better { -pct } else { pct };
+                    if worse > tol {
+                        let detail =
+                            format!("{name} {bv:.4} -> {cv:.4} ({pct:+.1}%, tolerance {tol}%)");
+                        regressions.push(Regression {
+                            model: bm.model.clone(),
+                            metric: name,
+                            detail,
+                        });
+                    }
+                }
+                (Some(bv), None) => {
+                    let detail = format!("{name} {bv:.4} -> null (metric disappeared)");
+                    regressions.push(Regression { model: bm.model.clone(), metric: name, detail });
+                }
+                _ => {} // baseline null (e.g. committed wall-times): nothing to gate
+            }
+        }
+    }
+    Ok(Comparison { table, regressions })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,5 +485,79 @@ mod tests {
         let thr = CompareThresholds { latency_pct: 0.0, power_pct: 0.0, tops_w_pct: 0.0 };
         let cmp = compare(&[f.clone(), f], &thr).unwrap();
         assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+    }
+
+    fn tp_snapshot(label: &str, speedup: f64, fps: f64) -> ThroughputFile {
+        ThroughputFile {
+            label: label.into(),
+            models: vec![ThroughputModel {
+                model: "fpnseg_1_2".into(),
+                sim_wall_ms_1t: Some(120.0),
+                sim_wall_ms_nt: Some(120.0 / speedup),
+                speedup: Some(speedup),
+                frames_per_s: Some(fps),
+            }],
+        }
+    }
+
+    #[test]
+    fn parses_throughput_json_and_rejects_ppa() {
+        let text = super::super::bench_throughput_json(
+            4,
+            4,
+            3,
+            &[super::super::ThroughputEntry {
+                model: "fpnseg_1_2".into(),
+                twin: "fpnseg_w25_48x64".into(),
+                sim_wall_ms_1t: 120.0,
+                sim_wall_ms_nt: 40.0,
+                speedup: 3.0,
+                frames_per_s: 95.5,
+                frames: 24,
+            }],
+        );
+        let f = parse_bench_throughput("gen", &text).unwrap();
+        assert_eq!(f.models.len(), 1);
+        let m = &f.models[0];
+        assert_eq!(m.model, "fpnseg_1_2");
+        assert_eq!(m.speedup, Some(3.0));
+        assert_eq!(m.frames_per_s, Some(95.5));
+        // a bench-ppa document must be rejected, not parsed as empty
+        assert!(parse_bench_throughput("ppa", "{\"models\": []}").is_err());
+    }
+
+    #[test]
+    fn throughput_speedup_regression_gates_but_wall_time_does_not() {
+        // speedup collapse past tolerance gates
+        let base = tp_snapshot("base.json", 3.0, 90.0);
+        let cand = tp_snapshot("cand.json", 1.5, 90.0);
+        let cmp = compare_throughput(&[base, cand], &ThroughputThresholds::default()).unwrap();
+        assert_eq!(cmp.regressions.len(), 1, "{:?}", cmp.regressions);
+        assert_eq!(cmp.regressions[0].metric, "speedup");
+        // a slower machine (same speedup, 10x wall time) never gates
+        let base = tp_snapshot("base.json", 3.0, 90.0);
+        let mut cand = tp_snapshot("cand.json", 3.0, 90.0);
+        cand.models[0].sim_wall_ms_1t = Some(1200.0);
+        cand.models[0].sim_wall_ms_nt = Some(400.0);
+        let cmp = compare_throughput(&[base, cand], &ThroughputThresholds::default()).unwrap();
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        assert!(cmp.table.contains("sim_wall_ms_1t"), "{}", cmp.table);
+    }
+
+    #[test]
+    fn throughput_null_wall_time_baseline_passes() {
+        // the committed baseline ships null wall-times (machine-dependent):
+        // candidates with real timings must compare clean
+        let mut base = tp_snapshot("base.json", 1.0, 10.0);
+        base.models[0].sim_wall_ms_1t = None;
+        base.models[0].sim_wall_ms_nt = None;
+        let cand = tp_snapshot("cand.json", 3.0, 90.0);
+        let cmp = compare_throughput(&[base, cand], &ThroughputThresholds::default()).unwrap();
+        assert!(cmp.regressions.is_empty(), "{:?}", cmp.regressions);
+        let base = tp_snapshot("base.json", 3.0, 200.0);
+        let cand = tp_snapshot("cand.json", 3.0, 60.0); // fps -70% past the 60% tol
+        let cmp = compare_throughput(&[base, cand], &ThroughputThresholds::default()).unwrap();
+        assert_eq!(cmp.regressions.len(), 1, "{:?}", cmp.regressions);
+        assert_eq!(cmp.regressions[0].metric, "frames_per_s");
     }
 }

@@ -738,6 +738,58 @@ pub fn bench_telemetry_json(entries: &[BenchEntry]) -> String {
     s
 }
 
+/// One model's entry for `BENCH_throughput.json` (`j3dai bench-throughput`).
+#[derive(Debug, Clone)]
+pub struct ThroughputEntry {
+    /// Paper workload name (e.g. `fpnseg_1_2`).
+    pub model: String,
+    /// Artifact twin the frame pipeline ran (e.g. `fpnseg_w25_48x64`).
+    pub twin: String,
+    /// Min wall-clock of the cycle simulation at 1 thread, ms.
+    pub sim_wall_ms_1t: f64,
+    /// Min wall-clock at the benchmarked thread count, ms.
+    pub sim_wall_ms_nt: f64,
+    /// `sim_wall_ms_1t / sim_wall_ms_nt` — scale-invariant, the gated metric.
+    pub speedup: f64,
+    /// End-to-end frames/s of the multi-worker functional pipeline.
+    pub frames_per_s: f64,
+    /// Frames the pipeline processed for the fps figure.
+    pub frames: u64,
+}
+
+/// Render the machine-readable throughput benchmark file. The `"bench":
+/// "throughput"` tag is how `bench-compare` tells this format apart from
+/// `bench-ppa` output; [`compare::parse_bench_throughput`] re-parses it.
+pub fn bench_throughput_json(
+    threads: usize,
+    workers: usize,
+    iters: usize,
+    entries: &[ThroughputEntry],
+) -> String {
+    let mut s = format!(
+        "{{\n  \"bench\": \"throughput\",\n  \"threads\": {threads},\n  \
+         \"workers\": {workers},\n  \"iters\": {iters},\n  \"models\": ["
+    );
+    for (i, e) in entries.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"model\": \"{}\", \"twin\": \"{}\", \"sim_wall_ms_1t\": {}, \
+             \"sim_wall_ms_nt\": {}, \"speedup\": {}, \"frames_per_s\": {}, \"frames\": {}}}",
+            json::escape(&e.model),
+            json::escape(&e.twin),
+            json::fmt_f64(e.sim_wall_ms_1t),
+            json::fmt_f64(e.sim_wall_ms_nt),
+            json::fmt_f64(e.speedup),
+            json::fmt_f64(e.frames_per_s),
+            e.frames,
+        ));
+    }
+    s.push_str("\n  ]\n}\n");
+    s
+}
+
 /// Render the `lint` subcommand's human-readable diagnostics table for
 /// one verified model: summary line, fixed-width columns, then (when the
 /// policy captured any) the listing context of each error.

@@ -68,6 +68,9 @@ fn conv(name: &str, x: &Tensor, kh: usize, kw: usize, cout: usize, stride: usize
     let oh = (h + 2 * ph - kh) / stride + 1;
     let ow = (w + 2 * pw - kw) / stride + 1;
     let zp = quant::ZP;
+    let (hi, wi) = (h as isize, w as isize);
+    // contiguous HWC taps under one kernel row
+    let row_taps = kw * cin;
     let mut out = vec![0u8; oh * ow * cout];
     // co-innermost accumulation: the weight layout (kh, kw, cin, cout) is
     // contiguous in co, so the inner loop streams both operands linearly —
@@ -75,25 +78,51 @@ fn conv(name: &str, x: &Tensor, kh: usize, kw: usize, cout: usize, stride: usize
     // NCB the same activation while each PE owns one output channel.
     let mut acc = vec![0i32; cout];
     for oy in 0..oh {
+        let base_y = (oy * stride) as isize - ph as isize;
         for ox in 0..ow {
-            let base_y = (oy * stride) as isize - ph as isize;
             let base_x = (ox * stride) as isize - pw as isize;
             acc.copy_from_slice(&bias);
-            for dy in 0..kh {
-                let yy = base_y + dy as isize;
-                if yy < 0 || yy >= h as isize {
-                    continue; // padded taps contribute (zp - zp) * w = 0
-                }
-                for dx in 0..kw {
-                    let xx = base_x + dx as isize;
-                    if xx < 0 || xx >= w as isize {
-                        continue;
-                    }
-                    for ci in 0..cin {
-                        let a = x.at(yy as usize, xx as usize, ci) as i32 - zp;
-                        let wrow = &wq[(((dy * kw + dx) * cin) + ci) * cout..][..cout];
+            let interior = base_y >= 0
+                && base_y + kh as isize <= hi
+                && base_x >= 0
+                && base_x + kw as isize <= wi;
+            if interior {
+                // interior fast path: every kernel row is one contiguous
+                // activation slice paired with one contiguous weight block,
+                // no per-tap index arithmetic or bounds checks
+                let (y0, x0) = (base_y as usize, base_x as usize);
+                for dy in 0..kh {
+                    let arow = &x.data[((y0 + dy) * w + x0) * cin..][..row_taps];
+                    let wbase = dy * row_taps * cout;
+                    for (t, &xv) in arow.iter().enumerate() {
+                        let a = xv as i32 - zp;
+                        let wrow = &wq[wbase + t * cout..][..cout];
                         for (acc_co, &wv) in acc.iter_mut().zip(wrow) {
                             *acc_co += a * wv as i32;
+                        }
+                    }
+                }
+            } else {
+                // border path: clip padded taps (they contribute
+                // (zp - zp) * w = 0), pixel slices still hoisted
+                for dy in 0..kh {
+                    let yy = base_y + dy as isize;
+                    if yy < 0 || yy >= hi {
+                        continue;
+                    }
+                    for dx in 0..kw {
+                        let xx = base_x + dx as isize;
+                        if xx < 0 || xx >= wi {
+                            continue;
+                        }
+                        let apx = &x.data[((yy as usize) * w + xx as usize) * cin..][..cin];
+                        let wbase = (dy * kw + dx) * cin * cout;
+                        for (ci, &xv) in apx.iter().enumerate() {
+                            let a = xv as i32 - zp;
+                            let wrow = &wq[wbase + ci * cout..][..cout];
+                            for (acc_co, &wv) in acc.iter_mut().zip(wrow) {
+                                *acc_co += a * wv as i32;
+                            }
                         }
                     }
                 }
@@ -115,28 +144,51 @@ fn dwconv(name: &str, x: &Tensor, stride: usize) -> Tensor {
     let zp = quant::ZP;
     let oh = (h + 2 - 3) / stride + 1;
     let ow = (w + 2 - 3) / stride + 1;
+    let (hi, wi) = (h as isize, w as isize);
     let mut out = vec![0u8; oh * ow * c];
+    // channel-vector accumulation: per tap, activations and weights (layout
+    // (3, 3, c)) are both length-c contiguous slices — all channels advance
+    // in lockstep, the SIMD-lane view of an NCB
+    let mut acc = vec![0i32; c];
     for oy in 0..oh {
+        let base_y = (oy * stride) as isize - 1;
         for ox in 0..ow {
-            let base_y = (oy * stride) as isize - 1;
             let base_x = (ox * stride) as isize - 1;
-            for ch in 0..c {
-                let mut acc = bias[ch];
+            acc.copy_from_slice(&bias);
+            let interior = base_y >= 0 && base_y + 3 <= hi && base_x >= 0 && base_x + 3 <= wi;
+            if interior {
+                let (y0, x0) = (base_y as usize, base_x as usize);
                 for dy in 0..3 {
-                    let yy = base_y + dy as isize;
-                    if yy < 0 || yy >= h as isize {
-                        continue;
-                    }
                     for dx in 0..3 {
-                        let xx = base_x + dx as isize;
-                        if xx < 0 || xx >= w as isize {
-                            continue;
+                        let apx = &x.data[((y0 + dy) * w + x0 + dx) * c..][..c];
+                        let wpx = &wq[(dy * 3 + dx) * c..][..c];
+                        for ((acc_ch, &xv), &wv) in acc.iter_mut().zip(apx).zip(wpx) {
+                            *acc_ch = pe::mac(*acc_ch, xv, zp, wv);
                         }
-                        // weight layout (3, 3, c)
-                        acc = pe::mac(acc, x.at(yy as usize, xx as usize, ch), zp, wq[(dy * 3 + dx) * c + ch]);
                     }
                 }
-                out[(oy * ow + ox) * c + ch] = pe::requant(acc, &rq);
+            } else {
+                for dy in 0..3usize {
+                    let yy = base_y + dy as isize;
+                    if yy < 0 || yy >= hi {
+                        continue;
+                    }
+                    for dx in 0..3usize {
+                        let xx = base_x + dx as isize;
+                        if xx < 0 || xx >= wi {
+                            continue;
+                        }
+                        let apx = &x.data[((yy as usize) * w + xx as usize) * c..][..c];
+                        let wpx = &wq[(dy * 3 + dx) * c..][..c];
+                        for ((acc_ch, &xv), &wv) in acc.iter_mut().zip(apx).zip(wpx) {
+                            *acc_ch = pe::mac(*acc_ch, xv, zp, wv);
+                        }
+                    }
+                }
+            }
+            let orow = &mut out[(oy * ow + ox) * c..][..c];
+            for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                *o = pe::requant(a, &rq);
             }
         }
     }
@@ -172,27 +224,25 @@ fn qadd(a: &Tensor, b: &Tensor) -> Tensor {
 fn avgpool(x: &Tensor) -> Tensor {
     let (h, w, c) = (x.shape.h, x.shape.w, x.shape.c);
     let n = (h * w) as i64;
-    let mut out = vec![0u8; c];
-    for (ch, o) in out.iter_mut().enumerate() {
-        let mut sum = 0i64;
-        for y in 0..h {
-            for xx in 0..w {
-                sum += x.at(y, xx, ch) as i64;
-            }
+    // single pass over the HWC data: i64 sums are exact, so the per-channel
+    // result is order-independent
+    let mut sums = vec![0i64; c];
+    for px in x.data.chunks_exact(c) {
+        for (s, &v) in sums.iter_mut().zip(px) {
+            *s += v as i64;
         }
-        *o = pe::avg_round(sum, n);
     }
+    let out = sums.iter().map(|&s| pe::avg_round(s, n)).collect();
     Tensor::new(Shape::new(1, 1, c), out)
 }
 
 fn upsample(x: &Tensor, to_h: usize, to_w: usize) -> Tensor {
-    let c = x.shape.c;
+    let (w, c) = (x.shape.w, x.shape.c);
     let mut out = vec![0u8; to_h * to_w * c];
-    for y in 0..to_h {
-        for xx in 0..to_w {
-            for ch in 0..c {
-                out[(y * to_w + xx) * c + ch] = x.at(y / 2, xx / 2, ch);
-            }
+    for (y, orow) in out.chunks_exact_mut(to_w * c).enumerate() {
+        let srow = &x.data[(y / 2) * w * c..];
+        for (xx, opx) in orow.chunks_exact_mut(c).enumerate() {
+            opx.copy_from_slice(&srow[(xx / 2) * c..][..c]);
         }
     }
     Tensor::new(Shape::new(to_h, to_w, c), out)
@@ -207,6 +257,103 @@ fn nlu(x: &Tensor) -> Tensor {
 /// (same stream as `aot.py`).
 pub fn synthetic_input(registry_name: &str, shape: Shape) -> Tensor {
     Tensor::new(shape, weights::gen_input_u8(registry_name, shape.elems()))
+}
+
+/// Naive reference kernels — the original `Tensor::at`-indexed loops, kept
+/// verbatim as the oracle the row-sliced fast kernels are proven against
+/// (see `kernel_equivalence` tests below).
+#[cfg(test)]
+pub(crate) mod reference {
+    use super::*;
+
+    pub fn conv_naive(
+        name: &str,
+        x: &Tensor,
+        kh: usize,
+        kw: usize,
+        cout: usize,
+        stride: usize,
+        relu: bool,
+    ) -> Tensor {
+        let (h, w, cin) = (x.shape.h, x.shape.w, x.shape.c);
+        let k = kh * kw * cin;
+        let wq = weights::gen_weights_i8(&format!("{name}/w"), k * cout);
+        let bias = weights::gen_bias_i32(name, cout);
+        let rq = rq_for(k, relu);
+        let (ph, pw) = ((kh - 1) / 2, (kw - 1) / 2);
+        let oh = (h + 2 * ph - kh) / stride + 1;
+        let ow = (w + 2 * pw - kw) / stride + 1;
+        let zp = quant::ZP;
+        let mut out = vec![0u8; oh * ow * cout];
+        let mut acc = vec![0i32; cout];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let base_y = (oy * stride) as isize - ph as isize;
+                let base_x = (ox * stride) as isize - pw as isize;
+                acc.copy_from_slice(&bias);
+                for dy in 0..kh {
+                    let yy = base_y + dy as isize;
+                    if yy < 0 || yy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..kw {
+                        let xx = base_x + dx as isize;
+                        if xx < 0 || xx >= w as isize {
+                            continue;
+                        }
+                        for ci in 0..cin {
+                            let a = x.at(yy as usize, xx as usize, ci) as i32 - zp;
+                            let wrow = &wq[(((dy * kw + dx) * cin) + ci) * cout..][..cout];
+                            for (acc_co, &wv) in acc.iter_mut().zip(wrow) {
+                                *acc_co += a * wv as i32;
+                            }
+                        }
+                    }
+                }
+                let orow = &mut out[(oy * ow + ox) * cout..][..cout];
+                for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                    *o = pe::requant(a, &rq);
+                }
+            }
+        }
+        Tensor::new(Shape::new(oh, ow, cout), out)
+    }
+
+    pub fn dwconv_naive(name: &str, x: &Tensor, stride: usize) -> Tensor {
+        let (h, w, c) = (x.shape.h, x.shape.w, x.shape.c);
+        let wq = weights::gen_weights_i8(&format!("{name}/w"), 9 * c);
+        let bias = weights::gen_bias_i32(name, c);
+        let rq = rq_for(9, true);
+        let zp = quant::ZP;
+        let oh = (h + 2 - 3) / stride + 1;
+        let ow = (w + 2 - 3) / stride + 1;
+        let mut out = vec![0u8; oh * ow * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let base_y = (oy * stride) as isize - 1;
+                let base_x = (ox * stride) as isize - 1;
+                for ch in 0..c {
+                    let mut acc = bias[ch];
+                    for dy in 0..3usize {
+                        let yy = base_y + dy as isize;
+                        if yy < 0 || yy >= h as isize {
+                            continue;
+                        }
+                        for dx in 0..3usize {
+                            let xx = base_x + dx as isize;
+                            if xx < 0 || xx >= w as isize {
+                                continue;
+                            }
+                            let wv = wq[(dy * 3 + dx) * c + ch];
+                            acc = pe::mac(acc, x.at(yy as usize, xx as usize, ch), zp, wv);
+                        }
+                    }
+                    out[(oy * ow + ox) * c + ch] = pe::requant(acc, &rq);
+                }
+            }
+        }
+        Tensor::new(Shape::new(oh, ow, c), out)
+    }
 }
 
 #[cfg(test)]
@@ -272,6 +419,76 @@ mod tests {
             // non-degenerate output
             let first = y.data[0];
             assert!(y.data.iter().any(|&v| v != first), "{name} output collapsed");
+        }
+    }
+
+    /// The fast row-sliced kernels must match the naive reference
+    /// element-for-element on every conv/dwconv layer of every registry
+    /// model, fed the true intermediate activations.
+    #[test]
+    fn kernel_equivalence_on_registry_models() {
+        for name in ["tinycnn_24x32", "mbv1_w25_48x64", "mbv2_w25_48x64", "fpnseg_w25_48x64"] {
+            let g = models::artifact_graph(name).unwrap();
+            let input = synthetic_input(name, g.input);
+            let outs = run(&g, &input);
+            for (li, l) in g.layers.iter().enumerate() {
+                let x = if l.inputs[0] == INPUT { &input } else { &outs[l.inputs[0]] };
+                match &l.op {
+                    Op::Conv { kh, kw, cout, stride, relu } => {
+                        let naive =
+                            reference::conv_naive(&l.name, x, *kh, *kw, *cout, *stride, *relu);
+                        assert_eq!(naive.shape, outs[li].shape, "{name}/{}", l.name);
+                        assert_eq!(naive.data, outs[li].data, "{name}/{}", l.name);
+                    }
+                    Op::DwConv { stride } => {
+                        let naive = reference::dwconv_naive(&l.name, x, *stride);
+                        assert_eq!(naive.data, outs[li].data, "{name}/{}", l.name);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    fn xorshift(state: &mut u64) -> u64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        *state
+    }
+
+    /// Randomized shapes — odd extents, stride 2, 1x1/3x3/5x5 and
+    /// rectangular kernels — the cases the interior/border split must get
+    /// right. Deterministic xorshift keeps the sweep reproducible.
+    #[test]
+    fn kernel_equivalence_on_random_shapes() {
+        let mut st = 0x9E37_79B9_7F4A_7C15u64;
+        for case in 0..24 {
+            let h = 3 + (xorshift(&mut st) % 10) as usize;
+            let w = 3 + (xorshift(&mut st) % 10) as usize;
+            let cin = 1 + (xorshift(&mut st) % 7) as usize;
+            let cout = 1 + (xorshift(&mut st) % 8) as usize;
+            let kh = [1, 3, 5][(xorshift(&mut st) % 3) as usize];
+            let kw = [1, 3, 5][(xorshift(&mut st) % 3) as usize];
+            let stride = 1 + (xorshift(&mut st) % 2) as usize;
+            let relu = xorshift(&mut st) % 2 == 0;
+            let shape = Shape::new(h, w, cin);
+            let x = Tensor::new(
+                shape,
+                weights::gen_input_u8(&format!("kern{case}/in"), shape.elems()),
+            );
+            let tag = format!("case {case}: {h}x{w}x{cin} k{kh}x{kw} s{stride} cout{cout}");
+            let name = format!("kern{case}/conv");
+            let fast = conv(&name, &x, kh, kw, cout, stride, relu);
+            let naive = reference::conv_naive(&name, &x, kh, kw, cout, stride, relu);
+            assert_eq!(fast.shape, naive.shape, "{tag}");
+            assert_eq!(fast.data, naive.data, "{tag}");
+            // depthwise over the same frame
+            let dname = format!("kern{case}/dw");
+            let dfast = dwconv(&dname, &x, stride);
+            let dnaive = reference::dwconv_naive(&dname, &x, stride);
+            assert_eq!(dfast.shape, dnaive.shape, "{tag} dw");
+            assert_eq!(dfast.data, dnaive.data, "{tag} dw");
         }
     }
 }

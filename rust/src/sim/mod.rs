@@ -25,6 +25,7 @@ pub mod system;
 
 pub use engine::{run_cluster_traced, ClusterRun, InstrSpan};
 pub use system::{
-    sample_timeseries, simulate, simulate_compiled, simulate_compiled_traced, simulate_traced,
-    LayerStats, SimResult, SimTrace,
+    default_threads, sample_timeseries, simulate, simulate_compiled,
+    simulate_compiled_threads, simulate_compiled_traced, simulate_compiled_traced_threads,
+    simulate_threads, simulate_traced, simulate_traced_threads, LayerStats, SimResult, SimTrace,
 };

@@ -1,12 +1,18 @@
 //! System-level simulation: compile a graph, run every cluster program,
 //! merge the activity, add host orchestration and DMA-bus contention —
 //! producing the numbers Table I/II report.
+//!
+//! Cluster programs are independent once compiled, so the per-cluster
+//! cycle simulations can run on host threads (`*_threads` entry points).
+//! Results are merged in cluster-index order, which keeps every artifact
+//! — `SimResult`, PMU banks, trace spans, folded profiles — byte-for-byte
+//! identical to the serial path (see `tests/perf_parallel.rs`).
 
 use super::engine::{run_cluster, run_cluster_traced, ClusterRun, InstrSpan};
 use crate::compiler::{self, scheduler, Compiled};
 use crate::config::ArchConfig;
 use crate::graph::Graph;
-use crate::isa::Engine;
+use crate::isa::{Engine, Program};
 use crate::power::{self, Activity, EnergyModel};
 use crate::telemetry::pmu::N_STALL_REASONS;
 use crate::telemetry::{
@@ -60,8 +66,52 @@ impl SimResult {
 
 /// Simulate one inference of `g` on `cfg`.
 pub fn simulate(g: &Graph, cfg: &ArchConfig) -> crate::Result<SimResult> {
+    simulate_threads(g, cfg, 1)
+}
+
+/// [`simulate`] with the per-cluster simulations spread across up to
+/// `threads` host threads.
+pub fn simulate_threads(g: &Graph, cfg: &ArchConfig, threads: usize) -> crate::Result<SimResult> {
     let compiled = compiler::compile(g, cfg)?;
-    Ok(simulate_compiled(g, cfg, &compiled))
+    Ok(simulate_compiled_threads(g, cfg, &compiled, threads))
+}
+
+/// Default worker-thread count for cluster-parallel simulation (the CLI
+/// `--threads` default): the host's available parallelism, or 1 if it
+/// cannot be determined.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
+}
+
+/// Run `f` over every cluster program on up to `threads` scoped workers,
+/// returning results in program order. Each worker owns a disjoint
+/// contiguous range of result slots, so the merge order — and therefore
+/// every downstream artifact — is independent of thread scheduling;
+/// `run_cluster` itself is a pure function of `(cfg, program, penalty)`.
+fn run_partitioned<T, F>(programs: &[Program], threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&Program) -> T + Sync,
+{
+    let n = programs.len();
+    let workers = threads.clamp(1, n.max(1));
+    if workers <= 1 {
+        return programs.iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let chunk = n.div_ceil(workers);
+    let fref = &f;
+    std::thread::scope(|s| {
+        for (slot_chunk, prog_chunk) in slots.chunks_mut(chunk).zip(programs.chunks(chunk)) {
+            s.spawn(move || {
+                for (slot, p) in slot_chunk.iter_mut().zip(prog_chunk) {
+                    *slot = Some(fref(p));
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|o| o.expect("every cluster slot filled")).collect()
 }
 
 /// DMA-bus contention: the 64-bit system interconnect is shared by all
@@ -77,9 +127,21 @@ fn dma_penalty(cfg: &ArchConfig) -> u64 {
 
 /// Simulate from an already-compiled artifact (reused by the coordinator).
 pub fn simulate_compiled(g: &Graph, cfg: &ArchConfig, compiled: &Compiled) -> SimResult {
+    simulate_compiled_threads(g, cfg, compiled, 1)
+}
+
+/// [`simulate_compiled`] with the per-cluster simulations spread across up
+/// to `threads` host threads. Bit-identical to the serial path for any
+/// thread count.
+pub fn simulate_compiled_threads(
+    g: &Graph,
+    cfg: &ArchConfig,
+    compiled: &Compiled,
+    threads: usize,
+) -> SimResult {
     let penalty = dma_penalty(cfg);
     let runs: Vec<ClusterRun> =
-        compiled.cluster_programs.iter().map(|p| run_cluster(cfg, p, penalty)).collect();
+        run_partitioned(&compiled.cluster_programs, threads, |p| run_cluster(cfg, p, penalty));
     finish(g, cfg, compiled, &runs)
 }
 
@@ -176,8 +238,18 @@ pub struct SimTrace {
 /// [`simulate`], also producing per-layer stats and a Perfetto-loadable
 /// span trace.
 pub fn simulate_traced(g: &Graph, cfg: &ArchConfig) -> crate::Result<(SimResult, SimTrace)> {
+    simulate_traced_threads(g, cfg, 1)
+}
+
+/// [`simulate_traced`] with the per-cluster simulations spread across up
+/// to `threads` host threads.
+pub fn simulate_traced_threads(
+    g: &Graph,
+    cfg: &ArchConfig,
+    threads: usize,
+) -> crate::Result<(SimResult, SimTrace)> {
     let compiled = compiler::compile(g, cfg)?;
-    Ok(simulate_compiled_traced(g, cfg, &compiled))
+    Ok(simulate_compiled_traced_threads(g, cfg, &compiled, threads))
 }
 
 /// [`simulate_compiled`] with span collection. The `SimResult` matches the
@@ -187,14 +259,23 @@ pub fn simulate_compiled_traced(
     cfg: &ArchConfig,
     compiled: &Compiled,
 ) -> (SimResult, SimTrace) {
+    simulate_compiled_traced_threads(g, cfg, compiled, 1)
+}
+
+/// [`simulate_compiled_traced`] across up to `threads` host threads. Span
+/// vectors stay keyed by cluster index, so the trace and folded profile
+/// are byte-identical to the serial path.
+pub fn simulate_compiled_traced_threads(
+    g: &Graph,
+    cfg: &ArchConfig,
+    compiled: &Compiled,
+    threads: usize,
+) -> (SimResult, SimTrace) {
     let penalty = dma_penalty(cfg);
-    let mut runs = Vec::with_capacity(compiled.cluster_programs.len());
-    let mut cluster_spans = Vec::with_capacity(compiled.cluster_programs.len());
-    for prog in &compiled.cluster_programs {
-        let (run, spans) = run_cluster_traced(cfg, prog, penalty);
-        runs.push(run);
-        cluster_spans.push(spans);
-    }
+    let results = run_partitioned(&compiled.cluster_programs, threads, |p| {
+        run_cluster_traced(cfg, p, penalty)
+    });
+    let (runs, cluster_spans): (Vec<ClusterRun>, Vec<Vec<InstrSpan>>) = results.into_iter().unzip();
     let result = finish(g, cfg, compiled, &runs);
     let trace = build_sim_trace(g, cfg, compiled, &runs, &cluster_spans);
     (result, trace)
@@ -667,6 +748,45 @@ mod tests {
             (total_mj - span_mj).abs() < 1e-6 * span_mj.max(1.0),
             "windows={total_mj} spans={span_mj}"
         );
+    }
+
+    #[test]
+    fn parallel_simulation_matches_serial() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        let compiled = compiler::compile(&g, &cfg).unwrap();
+        let serial = simulate_compiled(&g, &cfg, &compiled);
+        // 2 and 3 exercise uneven partitions of 6 clusters; 64 oversubscribes
+        for threads in [2, 3, 64] {
+            let par = simulate_compiled_threads(&g, &cfg, &compiled, threads);
+            assert_eq!(serial.cycles, par.cycles, "threads={threads}");
+            assert_eq!(serial.host_cycles, par.host_cycles, "threads={threads}");
+            assert_eq!(serial.activity, par.activity, "threads={threads}");
+            assert_eq!(serial.clusters.len(), par.clusters.len());
+            for (ci, (a, b)) in serial.clusters.iter().zip(&par.clusters).enumerate() {
+                assert_eq!(a.cycles, b.cycles, "cluster {ci}");
+                assert_eq!(a.activity, b.activity, "cluster {ci}");
+                assert_eq!(a.pmu, b.pmu, "cluster {ci}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_traced_matches_serial_trace() {
+        let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+        let cfg = ArchConfig::j3dai();
+        let compiled = compiler::compile(&g, &cfg).unwrap();
+        let (rs, ts) = simulate_compiled_traced(&g, &cfg, &compiled);
+        let (rp, tp) = simulate_compiled_traced_threads(&g, &cfg, &compiled, 4);
+        assert_eq!(rs.cycles, rp.cycles);
+        assert_eq!(rs.activity, rp.activity);
+        assert_eq!(ts.trace.events, tp.trace.events);
+        assert_eq!(ts.folded, tp.folded);
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
     }
 
     #[test]

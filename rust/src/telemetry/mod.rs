@@ -253,4 +253,48 @@ mod tests {
         t.registry.counter("c_total", "").inc();
         assert!(t.render_metrics().contains("c_total 1"));
     }
+
+    #[test]
+    fn concurrent_sampling_keeps_samples_intact() {
+        use crate::telemetry::json::Json;
+        // M producers race Telemetry::sample; the sampler mutex serializes
+        // pushes, so every retained sample must be an untorn (tid, val)
+        // pair and the stored timestamps must never run backwards
+        let tel = Telemetry::disabled();
+        tel.install_sampler(RingSampler::new(0.0, 64, vec!["tid".into(), "val".into()]));
+        let producers = 4u64;
+        let per = 100u64;
+        let telref = &tel;
+        std::thread::scope(|s| {
+            for ti in 0..producers {
+                s.spawn(move || {
+                    for i in 0..per {
+                        let t = (ti * per + i) as f64;
+                        telref.sample(t, vec![ti as f64, (ti * 1000 + i) as f64]);
+                    }
+                });
+            }
+        });
+        let doc = Json::parse(&tel.export_timeseries_json()).expect("valid JSON");
+        let samples = doc.get("samples").and_then(Json::as_arr).unwrap();
+        // the producer with the highest timestamps alone appends `per`
+        // times, so the 64-slot ring is full and drops are accounted
+        assert_eq!(samples.len(), 64);
+        let dropped = doc.get("dropped").and_then(Json::as_f64).unwrap();
+        assert!(dropped >= (per - 64) as f64, "dropped={dropped}");
+        let mut prev = f64::MIN;
+        for s in samples {
+            let t = s.get("t").and_then(Json::as_f64).unwrap();
+            assert!(t >= prev, "timestamps ran backwards: {t} after {prev}");
+            prev = t;
+            let v = s.get("v").and_then(Json::as_arr).unwrap();
+            assert_eq!(v.len(), 2);
+            let tid = v[0].as_f64().unwrap();
+            let val = v[1].as_f64().unwrap();
+            // untorn pair: val encodes (tid, i) with t = tid*per + i
+            let i = val - tid * 1000.0;
+            assert!((0.0..producers as f64).contains(&tid), "tid={tid}");
+            assert!((0.0..per as f64).contains(&i), "val={val} tid={tid}");
+        }
+    }
 }

@@ -69,11 +69,15 @@ impl RingSampler {
 
     /// Record a snapshot. A push closer than `interval` to the previous
     /// one coalesces: the newest values overwrite the last slot (its
-    /// timestamp is kept so the grid stays on-interval).
+    /// timestamp is kept so the grid stays on-interval). A push whose
+    /// timestamp is *behind* the newest slot (a late arrival from a
+    /// concurrent producer losing the race to the sampler lock) also
+    /// coalesces, for any interval — the stored grid never runs backwards,
+    /// so consumers can rely on non-decreasing timestamps.
     pub fn push(&mut self, t: f64, v: Vec<f64>) {
         debug_assert_eq!(v.len(), self.series.len());
         if let Some(last) = self.samples.back_mut() {
-            if self.interval > 0.0 && t - last.t < self.interval {
+            if t < last.t || (self.interval > 0.0 && t - last.t < self.interval) {
                 last.v = v;
                 return;
             }
@@ -165,6 +169,22 @@ mod tests {
         r.push(1.0, vec![1.0]);
         r.push(1.0, vec![2.0]);
         assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn out_of_order_push_folds_into_newest_slot() {
+        let mut r = RingSampler::new(0.0, 4, names(1));
+        r.push(5.0, vec![1.0]);
+        r.push(3.0, vec![2.0]); // late arrival: the grid cannot run backwards
+        assert_eq!(r.len(), 1);
+        let s = r.samples().next().unwrap().clone();
+        assert_eq!(s.t, 5.0);
+        assert_eq!(s.v, [2.0]);
+        r.push(6.0, vec![3.0]);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 0);
+        let ts: Vec<f64> = r.samples().map(|s| s.t).collect();
+        assert_eq!(ts, [5.0, 6.0]);
     }
 
     #[test]

@@ -40,7 +40,8 @@ fn metrics_endpoint_is_live_while_frames_flow() {
     let worker = {
         let tel = Arc::clone(&tel);
         let g = g.clone();
-        let ccfg = CoordinatorConfig { target_fps: 500.0, frames, arch: cfg.clone() };
+        let ccfg =
+            CoordinatorConfig { target_fps: 500.0, frames, arch: cfg.clone(), ..Default::default() };
         std::thread::spawn(move || run_functional_loop(&g, &ccfg, &tel).unwrap())
     };
 

@@ -111,7 +111,7 @@ fn frame_loop_publishes_cluster_series_exemplars_and_timeseries() {
     let g = models::tinycnn(Shape::new(24, 32, 3), 10);
     let tel = Telemetry::new(false);
     let ccfg =
-        CoordinatorConfig { target_fps: 10_000.0, frames: 3, arch: ArchConfig::j3dai() };
+        CoordinatorConfig { target_fps: 10_000.0, frames: 3, ..Default::default() };
     let stats = run_functional_loop(&g, &ccfg, &tel).unwrap();
     assert_eq!(stats.frames, 3);
 

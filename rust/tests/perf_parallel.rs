@@ -1,0 +1,162 @@
+//! Parallelism correctness: the cluster-parallel simulation must be
+//! bit-identical to the serial path on every Table I workload, and the
+//! multi-worker frame pipeline must reassemble records in frame order
+//! with per-worker telemetry intact.
+
+use j3dai::config::ArchConfig;
+use j3dai::coordinator::{run_functional_loop, CoordinatorConfig};
+use j3dai::graph::Shape;
+use j3dai::telemetry::{json::Json, metrics, Telemetry, FRAME_PID};
+use j3dai::{compiler, models, sim};
+
+/// Determinism gate (ISSUE 10 acceptance): `threads=1` vs `threads=4`
+/// produce identical cycles, per-cluster PMU banks, Activity and folded
+/// profiles on all three Table I workloads.
+#[test]
+fn parallel_simulation_is_bit_identical_on_table1_workloads() {
+    let cfg = ArchConfig::j3dai();
+    for g in [models::paper_mbv1(), models::paper_mbv2(), models::paper_seg()] {
+        let compiled = compiler::compile(&g, &cfg).unwrap();
+
+        let serial = sim::simulate_compiled_threads(&g, &cfg, &compiled, 1);
+        let par = sim::simulate_compiled_threads(&g, &cfg, &compiled, 4);
+        assert_eq!(serial.cycles, par.cycles, "{}", g.name);
+        assert_eq!(serial.host_cycles, par.host_cycles, "{}", g.name);
+        assert_eq!(serial.activity, par.activity, "{}", g.name);
+        assert_eq!(serial.clusters.len(), par.clusters.len(), "{}", g.name);
+        for (ci, (a, b)) in serial.clusters.iter().zip(&par.clusters).enumerate() {
+            assert_eq!(a.cycles, b.cycles, "{} cluster {ci}", g.name);
+            assert_eq!(a.activity, b.activity, "{} cluster {ci}", g.name);
+            assert_eq!(a.compute_busy, b.compute_busy, "{} cluster {ci}", g.name);
+            assert_eq!(a.xfer_busy, b.xfer_busy, "{} cluster {ci}", g.name);
+            assert_eq!(a.pmu, b.pmu, "{} cluster {ci}", g.name);
+        }
+
+        // traced path: span stream and folded profile are byte-identical
+        let (rs, ts) = sim::simulate_compiled_traced_threads(&g, &cfg, &compiled, 1);
+        let (rp, tp) = sim::simulate_compiled_traced_threads(&g, &cfg, &compiled, 4);
+        assert_eq!(rs.cycles, rp.cycles, "{}", g.name);
+        assert_eq!(rs.activity, rp.activity, "{}", g.name);
+        assert_eq!(ts.trace.events, tp.trace.events, "{}", g.name);
+        assert_eq!(ts.folded, tp.folded, "{}", g.name);
+        assert_eq!(ts.folded.render(), tp.folded.render(), "{}", g.name);
+
+        // plain entry point matches the threaded one at any count
+        let plain = sim::simulate_compiled(&g, &cfg, &compiled);
+        assert_eq!(plain.cycles, par.cycles, "{}", g.name);
+    }
+}
+
+/// More workers than clusters must neither panic nor change results.
+#[test]
+fn thread_oversubscription_is_safe() {
+    let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+    let cfg = ArchConfig::j3dai();
+    let compiled = compiler::compile(&g, &cfg).unwrap();
+    let serial = sim::simulate_compiled_threads(&g, &cfg, &compiled, 1);
+    let par = sim::simulate_compiled_threads(&g, &cfg, &compiled, 64);
+    assert_eq!(serial.cycles, par.cycles);
+    assert_eq!(serial.activity, par.activity);
+}
+
+/// With M workers the frame loop must emit records in frame order, name
+/// every worker thread `infer-0..M-1` in the trace, and account each
+/// processed frame to exactly one worker counter.
+#[test]
+fn multi_worker_frame_loop_reassembles_in_order() {
+    let workers = 4usize;
+    let frames = 16u64;
+    let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+
+    let baseline = {
+        let tel = Telemetry::disabled();
+        let ccfg = CoordinatorConfig {
+            target_fps: 10_000.0,
+            frames,
+            workers: 1,
+            ..Default::default()
+        };
+        run_functional_loop(&g, &ccfg, &tel).unwrap()
+    };
+
+    let tel = Telemetry::new(true);
+    let ccfg = CoordinatorConfig {
+        target_fps: 10_000.0,
+        frames,
+        workers,
+        ..Default::default()
+    };
+    let stats = run_functional_loop(&g, &ccfg, &tel).unwrap();
+
+    // in-order reassembly: records carry consecutive frame indices and the
+    // per-frame classifications match the single-worker run exactly
+    assert_eq!(stats.frames, frames);
+    assert_eq!(stats.records.len(), frames as usize);
+    for (i, r) in stats.records.iter().enumerate() {
+        assert_eq!(r.frame_idx, i as u64, "records out of order");
+        assert_eq!(r.top_class, baseline.records[i].top_class, "frame {i}");
+    }
+
+    // every worker thread is named in the trace metadata and the exported
+    // Chrome JSON, and every infer span ran on a worker tid
+    let tr = tel.take_trace();
+    assert_eq!(tr.thread_label(FRAME_PID, 0), Some("capture"));
+    for wi in 0..workers {
+        assert_eq!(
+            tr.thread_label(FRAME_PID, 1 + wi as u32),
+            Some(format!("infer-{wi}").as_str()),
+            "worker {wi} unnamed"
+        );
+    }
+    let json = tr.to_chrome_json();
+    for wi in 0..workers {
+        assert!(json.contains(&format!("infer-{wi}")), "infer-{wi} missing from trace JSON");
+    }
+    let infer_spans: Vec<_> = tr.events.iter().filter(|e| e.name == "infer").collect();
+    assert_eq!(infer_spans.len(), frames as usize);
+    for e in &infer_spans {
+        assert!(
+            (1..=workers as u32).contains(&e.tid),
+            "infer span on unexpected tid {}",
+            e.tid
+        );
+    }
+
+    // per-worker counters account every frame exactly once
+    let series = metrics::parse_text(&tel.render_metrics()).unwrap();
+    let worker_total: f64 = series
+        .iter()
+        .filter(|(k, _)| k.starts_with("j3dai_worker_frames_total{"))
+        .map(|(_, v)| v)
+        .sum();
+    assert_eq!(worker_total, frames as f64);
+}
+
+/// The collector feeds the ring sampler from one thread, so M workers must
+/// not tear or reorder the time series: one snapshot per frame, timestamps
+/// non-decreasing, nothing dropped at this capacity.
+#[test]
+fn frame_loop_sampler_survives_many_workers() {
+    let frames = 12u64;
+    let g = models::tinycnn(Shape::new(24, 32, 3), 10);
+    let tel = Telemetry::new(false);
+    let ccfg = CoordinatorConfig {
+        target_fps: 10_000.0,
+        frames,
+        workers: 4,
+        ..Default::default()
+    };
+    run_functional_loop(&g, &ccfg, &tel).unwrap();
+
+    let doc = Json::parse(&tel.export_timeseries_json()).unwrap();
+    let samples = doc.get("samples").and_then(Json::as_arr).unwrap();
+    assert_eq!(samples.len(), frames as usize);
+    assert_eq!(doc.get("dropped").and_then(Json::as_f64), Some(0.0));
+    let mut prev = f64::MIN;
+    for s in samples {
+        let t = s.get("t").and_then(Json::as_f64).unwrap();
+        assert!(t >= prev, "sampler timestamps ran backwards");
+        prev = t;
+        assert_eq!(s.get("v").and_then(Json::as_arr).unwrap().len(), 4);
+    }
+}

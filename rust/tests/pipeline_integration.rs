@@ -23,7 +23,7 @@ fn coordinator_frame_loop_end_to_end() {
     }
     let coord = Coordinator::new(
         &runtime::default_artifact_dir(),
-        CoordinatorConfig { target_fps: 120.0, frames: 12, arch: ArchConfig::j3dai() },
+        CoordinatorConfig { target_fps: 120.0, frames: 12, ..Default::default() },
     )
     .unwrap();
     let stats = coord.run_model("tinycnn_24x32").unwrap();
@@ -43,7 +43,7 @@ fn coordinator_runs_every_artifact_model() {
     }
     let coord = Coordinator::new(
         &runtime::default_artifact_dir(),
-        CoordinatorConfig { target_fps: 500.0, frames: 3, arch: ArchConfig::j3dai() },
+        CoordinatorConfig { target_fps: 500.0, frames: 3, ..Default::default() },
     )
     .unwrap();
     let mut names = coord.model_names();
@@ -176,7 +176,7 @@ fn sim_energy_consistency_between_power_and_coordinator() {
     }
     let coord = Coordinator::new(
         &runtime::default_artifact_dir(),
-        CoordinatorConfig { target_fps: 1000.0, frames: 2, arch: ArchConfig::j3dai() },
+        CoordinatorConfig { target_fps: 1000.0, frames: 2, ..Default::default() },
     )
     .unwrap();
     let simr = coord.presimulate("tinycnn_24x32").unwrap();

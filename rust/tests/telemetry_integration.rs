@@ -113,6 +113,7 @@ fn functional_frame_loop_publishes_metrics() {
         target_fps: 10_000.0, // effectively unpaced: no sleeps in CI
         frames: 4,
         arch: ArchConfig::j3dai(),
+        ..Default::default()
     };
     let stats = run_functional_loop(&g, &ccfg, &tel).unwrap();
     assert_eq!(stats.frames, 4);
@@ -145,7 +146,7 @@ fn zero_frame_run_returns_empty_stats() {
     let g = models::tinycnn(Shape::new(24, 32, 3), 10);
     let tel = Telemetry::disabled();
     let ccfg =
-        CoordinatorConfig { target_fps: 10_000.0, frames: 0, arch: ArchConfig::j3dai() };
+        CoordinatorConfig { target_fps: 10_000.0, frames: 0, ..Default::default() };
     let stats = run_functional_loop(&g, &ccfg, &tel).unwrap();
     assert_eq!(stats.frames, 0);
     assert!(stats.records.is_empty());
